@@ -1,0 +1,30 @@
+"""Fig. 13 / Table 5: HashPrune parameter grid — hash bits m x reservoir
+size l_max (plus the unbounded-reservoir control), quality at fixed beam.
+The paper's finding: broad insensitivity for m >= 8; m = 6 degrades."""
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset, graph_recall, ground_truth, timed
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 8192, 32
+
+
+def run() -> list[Row]:
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    rows: list[Row] = []
+    for bits in (6, 8, 12, 16):
+        for l_max in (32, 64, 128):
+            p = PiPNNParams(
+                rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                leaf=LeafParams(k=2), hash_bits=bits, l_max=l_max,
+                max_deg=32, seed=0)
+            idx, secs = timed(pipnn.build, x, p)
+            r = graph_recall(idx.graph, idx.start, x, q, truth, beam=64)
+            rows.append((f"hashprune/m{bits}_l{l_max}", secs * 1e6,
+                         f"recall={r:.3f} "
+                         f"avg_deg={idx.average_degree():.2f}"))
+    return rows

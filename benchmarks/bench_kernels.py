@@ -1,0 +1,47 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU): latency per
+call + agreement with the pure-jnp oracle.  TPU performance claims come
+from the roofline (EXPERIMENTS.md), not these numbers — interpret mode
+measures correctness-path overhead only."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.kernels import ops, ref
+
+B, C, D_ = 4, 128, 32
+
+
+def run() -> list[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.standard_normal((B, C, D_)).astype(np.float32))
+    valid = jnp.asarray(rng.random((B, C)) > 0.1)
+    rows: list[Row] = []
+
+    fn = lambda: jax.block_until_ready(
+        ops.pairwise_distance(pts, pts, interpret=True))
+    _, _ = timed(fn)
+    ref_d = np.asarray(ref.pairwise_distance_ref(pts, pts))
+    out, secs = timed(fn, repeat=3)
+    err = float(np.max(np.abs(np.asarray(out) - ref_d)))
+    rows.append(("kernels/pairwise_distance", secs * 1e6,
+                 f"max_err_vs_ref={err:.2e}"))
+
+    fn = lambda: jax.block_until_ready(
+        ops.leaf_topk(pts, valid, k=2, interpret=True))
+    _, _ = timed(fn)
+    _, secs = timed(fn, repeat=3)
+    rows.append(("kernels/leaf_topk_flash", secs * 1e6, "k=2"))
+
+    x = rng.standard_normal((256, 16)).astype(np.float32)
+    h = rng.standard_normal((12, 16)).astype(np.float32)
+    sk = jnp.asarray(x @ h.T)
+    fn = lambda: jax.block_until_ready(ops.edge_hashes(sk, sk,
+                                                       interpret=True))
+    _, _ = timed(fn)
+    _, secs = timed(fn, repeat=3)
+    rows.append(("kernels/edge_hashes", secs * 1e6, "m=12"))
+    return rows

@@ -1,0 +1,65 @@
+"""Fig. 6: downstream k-NN graph construction (k=10, >=95% recall target):
+index build + all-points query, end-to-end, PiPNN vs Vamana vs HNSW."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, timed
+from repro.core import pipnn
+from repro.core.baselines.hnsw import HNSWParams, build_hnsw
+from repro.core.baselines.vamana import VamanaParams, build_vamana
+from repro.core.knn_graph import knn_graph_pipnn, knn_graph_recall
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D, K = 4096, 32, 10
+
+
+def _query_all(graph, start, x, k):
+    import jax.numpy as jnp
+
+    from repro.core import beam_search as bs
+
+    found, _ = bs.beam_search_batch(
+        jnp.asarray(graph), jnp.asarray(x), jnp.asarray(x), start=start,
+        beam=48, iters=52)
+    out = np.empty((x.shape[0], k), dtype=np.int64)
+    f = np.asarray(found)
+    for i in range(x.shape[0]):
+        row = f[i][f[i] != i][:k]
+        out[i] = np.pad(row, (0, k - len(row)), constant_values=-1)[:k]
+    return out
+
+
+def run() -> list[Row]:
+    x, _ = dataset(N, D)
+    rows: list[Row] = []
+
+    p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                    leaf=LeafParams(k=3), l_max=64, max_deg=32, seed=0)
+    (knn, timings), t_pipnn = timed(knn_graph_pipnn, x, k=K, beam=48,
+                                    params=p)
+    r = knn_graph_recall(x, knn, k=K, sample=400)
+    rows.append(("knn_graph/pipnn", t_pipnn * 1e6,
+                 f"recall={r:.3f} build_s={timings['build']:.2f} "
+                 f"query_s={timings['query']:.2f} slowdown=1.00x"))
+
+    def vam():
+        g, start, _ = build_vamana(x, VamanaParams(max_deg=32, beam=48))
+        return _query_all(g, start, x, K)
+
+    knn_v, t_vam = timed(vam)
+    rv = knn_graph_recall(x, knn_v, k=K, sample=400)
+    rows.append(("knn_graph/vamana", t_vam * 1e6,
+                 f"recall={rv:.3f} slowdown={t_vam / t_pipnn:.2f}x"))
+
+    def hnsw():
+        g, start, _ = build_hnsw(x, HNSWParams(m=16, ef_construction=48))
+        return _query_all(g, start, x, K)
+
+    knn_h, t_hnsw = timed(hnsw)
+    rh = knn_graph_recall(x, knn_h, k=K, sample=400)
+    rows.append(("knn_graph/hnsw", t_hnsw * 1e6,
+                 f"recall={rh:.3f} slowdown={t_hnsw / t_pipnn:.2f}x"))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 11: sweep the leaf k-NN parameter k in [1..8] — degree grows,
+visited-nodes falls, QPS peaks at k in {2,3,4} (the paper's sweet spot)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset, ground_truth, qps_at_recall
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 8192, 32
+
+
+def run() -> list[Row]:
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    rows: list[Row] = []
+    for k in (1, 2, 3, 4, 6, 8):
+        p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                        leaf=LeafParams(k=k), max_deg=32, seed=0)
+        idx = pipnn.build(x, p)
+        qps, r, beam = qps_at_recall(idx.graph, idx.start, x, q, truth,
+                                     target=0.9)
+        rows.append((f"leaf_k/k{k}", 1e6 / max(qps, 1e-9),
+                     f"qps@0.9={qps:.0f} recall={r:.3f} "
+                     f"avg_deg={idx.average_degree():.2f}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Fig. 10 / Table 3: the five leaf candidate-picking methods (bidirected /
+directed / inverted k-NN, degree-capped MST, all-to-all RobustPrune) —
+quality + average degree, partitioning fixed to RBC."""
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset, graph_recall, ground_truth, timed
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 8192, 32
+
+
+def run() -> list[Row]:
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    rows: list[Row] = []
+    for method in ("bidirected", "directed", "inverted", "mst",
+                   "robust_prune"):
+        p = PiPNNParams(
+            rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+            leaf=LeafParams(method=method, k=2, max_deg=32), max_deg=32,
+            seed=0)
+        idx, secs = timed(pipnn.build, x, p)
+        r = graph_recall(idx.graph, idx.start, x, q, truth, beam=64)
+        rows.append((f"leaf_methods/{method}", secs * 1e6,
+                     f"recall={r:.3f} avg_deg={idx.average_degree():.2f} "
+                     f"leaf_s={idx.timings['build_leaves']:.2f}"))
+    return rows

@@ -1,0 +1,84 @@
+"""Fig. 12 / Supplement A.4: leaf-building optimization ladder.
+
+(naive)  per-point python distance loops (what partitioning methods do
+         without the paper's insight);
+(D)      precomputed distance matrix, numpy;
+(D,E)    batched GEMM distance matrix, one launch for a whole leaf batch
+         (jax == our Eigen analog);
+(F)      fused FlashKNN Pallas kernel — distances + top-k in one pass,
+         never materializing the C^2 matrix (our TPU-native beyond-paper
+         step; validated in interpret mode here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, timed
+from repro.core.leaf import leaf_knn_jax
+from repro.core.rbc import RBCParams, leaves_to_padded, partition
+from repro.kernels import ops
+
+N, D = 8192, 32
+K = 2
+N_LEAVES = 16   # naive path is O(C^2 d) per leaf in python — keep it small
+
+
+def _naive_knn(pts: np.ndarray, valid: np.ndarray):
+    out = []
+    for b in range(pts.shape[0]):
+        ids = np.where(valid[b])[0]
+        for i in ids:
+            d = np.sum((pts[b, ids] - pts[b, i]) ** 2, axis=1)
+            d[ids == i] = np.inf
+            out.append(ids[np.argsort(d)[:K]])
+    return out
+
+
+def _numpy_matrix_knn(pts: np.ndarray, valid: np.ndarray):
+    out = []
+    for b in range(pts.shape[0]):
+        p = pts[b]
+        n2 = (p * p).sum(1)
+        dm = n2[:, None] + n2[None] - 2 * p @ p.T
+        dm[~valid[b]] = np.inf
+        dm[:, ~valid[b]] = np.inf
+        np.fill_diagonal(dm, np.inf)
+        out.append(np.argsort(dm, axis=1)[:, :K])
+    return out
+
+
+def run() -> list[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    x, _ = dataset(N, D)
+    leaves = partition(x, RBCParams(c_max=256, c_min=32, fanout=(2,)))
+    padded = leaves_to_padded(leaves, 256)[:N_LEAVES]
+    pts = x[np.maximum(padded, 0)]
+    valid = padded >= 0
+
+    rows: list[Row] = []
+    _, t_naive = timed(_naive_knn, pts, valid)
+    rows.append(("leaf_opts/naive_loop", t_naive / N_LEAVES * 1e6,
+                 "speedup=1.00x"))
+    _, t_np = timed(_numpy_matrix_knn, pts, valid, repeat=3)
+    rows.append(("leaf_opts/dist_matrix_numpy(D)", t_np / N_LEAVES * 1e6,
+                 f"speedup={t_naive / t_np:.2f}x"))
+
+    ptsj, validj = jnp.asarray(pts), jnp.asarray(valid)
+    fn = jax.jit(lambda: leaf_knn_jax(ptsj, validj, k=K))
+    _, _ = timed(lambda: jax.block_until_ready(fn()))
+    _, t_gemm = timed(lambda: jax.block_until_ready(fn()), repeat=5)
+    rows.append(("leaf_opts/batched_gemm(D,E)", t_gemm / N_LEAVES * 1e6,
+                 f"speedup={t_naive / t_gemm:.2f}x"))
+
+    flash = lambda: jax.block_until_ready(
+        ops.leaf_topk(ptsj, validj, k=K, interpret=True))
+    _, _ = timed(flash)
+    _, t_flash = timed(flash, repeat=3)
+    rows.append(("leaf_opts/flashknn_pallas(F,interp)",
+                 t_flash / N_LEAVES * 1e6,
+                 f"speedup={t_naive / t_flash:.2f}x "
+                 "(interpret mode; wins on TPU come from VMEM fusion, "
+                 "see EXPERIMENTS.md roofline)"))
+    return rows

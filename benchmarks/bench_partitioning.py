@@ -1,0 +1,33 @@
+"""Table 2 / Supplemental Fig. 7: the four partitioning strategies
+(randomized ball carving, binary partitioning, hierarchical k-means,
+sorting-LSH) — partition time + resulting index quality, leaf method
+fixed to bidirected 2-NN (as in the paper's ablation)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset, graph_recall, ground_truth
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 8192, 32
+
+
+def run() -> list[Row]:
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    rows: list[Row] = []
+    for method in ("rbc", "binary", "kmeans", "sorting_lsh"):
+        # binary/sorting_lsh have no fanout analog (paper A.1) -> replicas
+        rbc = RBCParams(c_max=256, c_min=32, fanout=(4, 2), replicas=1) \
+            if method in ("rbc", "kmeans") else \
+            RBCParams(c_max=256, c_min=32, fanout=(1,), replicas=4)
+        p = PiPNNParams(rbc=rbc, partitioner=method, leaf=LeafParams(k=2),
+                        max_deg=32, seed=0)
+        idx = pipnn.build(x, p)
+        r = graph_recall(idx.graph, idx.start, x, q, truth, beam=64)
+        rows.append((f"partitioning/{method}",
+                     idx.timings["partition"] * 1e6,
+                     f"recall={r:.3f} leaves={idx.stats['n_leaves']} "
+                     f"repeat={idx.stats['point_repeat']:.2f}"))
+    return rows

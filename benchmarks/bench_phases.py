@@ -1,0 +1,25 @@
+"""Fig. 4: fraction of build time in Partition / Build-Leaves / HashPrune /
+Final-Prune, from the orchestrator's own timers."""
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 8192, 32
+
+
+def run() -> list[Row]:
+    x, _ = dataset(N, D)
+    p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                    leaf=LeafParams(k=2), max_deg=32, seed=0)
+    idx = pipnn.build(x, p)
+    total = idx.timings["total"]
+    rows: list[Row] = []
+    for phase in ("partition", "build_leaves", "hashprune", "final_prune"):
+        t = idx.timings[phase]
+        rows.append((f"phases/{phase}", t * 1e6,
+                     f"share={t / total:.3f}"))
+    return rows

@@ -1,0 +1,56 @@
+"""Fig. 5: QPS-vs-recall curves for PiPNN (1 and 2 replicas) vs Vamana.
+
+Emits one row per (index, beam) point so the full trade-off curve is in
+the CSV; the summary row reports QPS at the 0.9-recall operating point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (Row, dataset, ground_truth, qps_at_recall,
+                               timed)
+from repro.core import pipnn
+from repro.core.baselines.vamana import VamanaParams, build_vamana
+from repro.core.beam_search import recall_at_k
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+N, D = 4096, 32
+
+
+def run() -> list[Row]:
+    import jax.numpy as jnp
+
+    from repro.core import beam_search as bs
+
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    rows: list[Row] = []
+
+    indexes = {}
+    for reps in (1, 2):
+        p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2),
+                                      replicas=reps),
+                        leaf=LeafParams(k=2), max_deg=32, seed=0)
+        idx = pipnn.build(x, p)
+        indexes[f"pipnn_{reps}rep"] = (idx.graph, idx.start)
+    g, start, _ = build_vamana(x, VamanaParams(max_deg=32, beam=48, passes=1))
+    indexes["vamana_1pass"] = (g, start)
+
+    xj, qj = jnp.asarray(x), jnp.asarray(q)
+    for name, (graph, start) in indexes.items():
+        gj = jnp.asarray(graph)
+        for beam in (8, 16, 32, 64):
+            fn = lambda: bs.beam_search_batch(gj, xj, qj, start=start,
+                                              beam=beam, iters=beam + 4)
+            (ids, _), _ = timed(fn)
+            (ids, _), secs = timed(fn, repeat=3)
+            r = recall_at_k(np.asarray(ids)[:, :10], truth[:, :10], 10)
+            rows.append((f"qps_recall/{name}/beam{beam}",
+                         secs / q.shape[0] * 1e6,
+                         f"recall={r:.3f} qps={q.shape[0] / secs:.0f}"))
+        qps, r, beam = qps_at_recall(graph, start, x, q, truth, target=0.9)
+        rows.append((f"qps_recall/{name}/at0.9", 1e6 / max(qps, 1e-9),
+                     f"qps={qps:.0f} recall={r:.3f} beam={beam}"))
+    return rows

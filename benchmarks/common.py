@@ -1,0 +1,98 @@
+"""Shared benchmark infrastructure.
+
+Every bench module exposes ``run() -> list[Row]``; a Row is
+``(name, us_per_call, derived)`` and ``benchmarks.run`` prints them as the
+CSV the deliverables require.  Datasets are Gaussian-mixture vectors with
+planted neighbor structure (data/pipeline.py), sized for the 1-core CPU
+container — the billion-scale regime is exercised structurally by the
+dry-run, not here.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import pipnn
+from repro.core.beam_search import brute_force_knn, recall_at_k
+from repro.data.pipeline import VectorPipelineConfig, make_queries, make_vectors
+
+Row = tuple[str, float, str]
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(n: int = 8192, d: int = 32, seed: int = 0,
+            n_queries: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    cfg = VectorPipelineConfig(n=n, dim=d, n_clusters=32, seed=seed)
+    return make_vectors(cfg), make_queries(cfg, n_queries)
+
+
+@functools.lru_cache(maxsize=8)
+def ground_truth(n: int, d: int, seed: int = 0, k: int = 10,
+                 n_queries: int = 256) -> np.ndarray:
+    x, q = dataset(n, d, seed, n_queries)
+    return brute_force_knn(x, q, k)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    """Returns (result, seconds) — median over ``repeat`` runs.
+
+    Blocks on jax async results so dispatch-only times never leak in."""
+    import jax
+
+    ts = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts))
+
+
+def graph_recall(graph: np.ndarray, start: int, x: np.ndarray,
+                 q: np.ndarray, truth: np.ndarray, *, beam: int = 64,
+                 k: int = 10, metric: str = "l2") -> float:
+    """10@10 recall of beam search over an adjacency matrix."""
+    import jax.numpy as jnp
+
+    from repro.core import beam_search as bs
+
+    ids, _ = bs.beam_search_batch(
+        jnp.asarray(graph), jnp.asarray(x), jnp.asarray(q),
+        start=start, beam=beam, iters=beam + 4, metric=metric)
+    return recall_at_k(np.asarray(ids)[:, :k], truth[:, :k], k)
+
+
+def qps_at_recall(graph: np.ndarray, start: int, x: np.ndarray,
+                  q: np.ndarray, truth: np.ndarray, *,
+                  target: float = 0.9, metric: str = "l2",
+                  beams=(8, 16, 24, 32, 48, 64, 96, 128)) -> tuple[float, float, int]:
+    """Sweep beam widths; return (QPS, recall, beam) at the first beam
+    reaching ``target`` recall (or the best seen)."""
+    import jax.numpy as jnp
+
+    from repro.core import beam_search as bs
+
+    gj, xj, qj = jnp.asarray(graph), jnp.asarray(x), jnp.asarray(q)
+    best = (0.0, 0.0, beams[-1])
+    for beam in beams:
+        fn = lambda: bs.beam_search_batch(gj, xj, qj, start=start, beam=beam,
+                                          iters=beam + 4, metric=metric)
+        (ids, _), _ = timed(fn)                      # warm-up/compile
+        (ids, _), secs = timed(fn, repeat=3)
+        r = recall_at_k(np.asarray(ids)[:, :10], truth[:, :10], 10)
+        qps = q.shape[0] / max(secs, 1e-9)
+        best = (qps, r, beam)
+        if r >= target:
+            return best
+    return best
+
+
+def fmt(x: float, nd: int = 3) -> str:
+    return f"{x:.{nd}f}"

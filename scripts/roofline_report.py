@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python scripts/roofline_report.py [--mesh single|multi|all]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(s: float) -> str:
+    if s == 0:
+        return "0"
+    if s < 0.1:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def load(out_dir: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows: list[dict], mesh: str) -> str:
+    out = ["| cell | mesh | kind | compute | memory | collective | dominant "
+           "| bound | frac | useful | HBM/chip | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['cell']} | {r['mesh']} | {r.get('kind','?')} "
+                       f"| FAIL: {r.get('error','')[:60]} ||||||||||")
+            continue
+        if mesh != "all" and r["mesh"] != mesh:
+            continue
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / bound if bound else 0.0
+        out.append(
+            f"| {r['cell']} | {r['mesh']} | {r['kind']} "
+            f"| {fmt_s(r['t_compute'])} | {fmt_s(r['t_memory'])} "
+            f"| {fmt_s(r['t_collective'])} | {r['dominant']} "
+            f"| {fmt_s(bound)} | {frac:.3f} | {r['useful_ratio']:.2f} "
+            f"| {r['bytes_per_device'] / 1e9:.1f}GB "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    print(table(load(args.dir), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: PiPNN (Pick-in-Partitions Nearest Neighbors) on JAX/TPU.
+
+A production-grade multi-pod framework implementing the PiPNN graph-index
+construction algorithm (HashPrune online pruning + randomized ball carving +
+GEMM leaf building), an LM architecture zoo for the assigned dry-run matrix,
+and the distributed runtime (mesh, launcher, checkpointing, roofline).
+"""
+__version__ = "1.0.0"

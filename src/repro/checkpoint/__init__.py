@@ -1,0 +1,2 @@
+"""Async sharded checkpointing with atomic commits + elastic restore."""
+from repro.checkpoint.checkpointer import Checkpointer

@@ -1,0 +1,149 @@
+"""Sharded, async, elastic checkpointing.
+
+Layout: ``<dir>/step_<n>/``, one ``.npy`` per pytree leaf plus a JSON
+manifest (tree structure, shapes, dtypes, step, data-pipeline counter).
+Writes happen on a background thread (training continues into the next
+step while the previous checkpoint drains — async checkpointing), with an
+atomic ``COMMIT`` marker written last; restore ignores uncommitted dirs,
+so a failure mid-write can never corrupt the restore path.
+
+Elastic: leaves are saved as LOGICAL (fully-gathered) arrays; ``restore``
+re-shards onto whatever mesh/sharding the caller provides, so a checkpoint
+taken on 256 chips restores onto 512 (or onto 1 CPU for debugging).
+Deletion keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+COMMIT = "COMMIT"
+MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        names.append(name)
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue[tuple | None]" = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._drain, daemon=True)
+        self._worker.start()
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------- write --
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory now; write to disk asynchronously."""
+        if self._error:
+            raise self._error
+        names, leaves, _ = _flatten_with_names(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        self._q.put((step, names, host, extra or {}))
+        if blocking:
+            self._q.join()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                self._write(*item)
+            except Exception as e:  # surfaced on next save()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, names, host, extra):
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for name, arr in zip(names, host):
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype)
+            }
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, COMMIT), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        self._q.join()
+        if self._error:
+            raise self._error
+
+    def close(self):
+        self._q.put(None)
+        self._q.join()
+
+    # -------------------------------------------------------------- read --
+    def committed_steps(self) -> list[int]:
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, d)
+            if d.startswith("step_") and not d.endswith(".tmp") \
+                    and os.path.exists(os.path.join(full, COMMIT)):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                shard_fn: Callable[[str, np.ndarray], Any] | None = None):
+        """Restore into the structure of ``like``; optionally re-shard each
+        leaf via ``shard_fn(name, array) -> jax.Array`` (elastic restore).
+
+        Returns (tree, extra_dict)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(os.path.join(path, COMMIT)):
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        names, leaves, treedef = _flatten_with_names(like)
+        out = []
+        for name, leaf in zip(names, leaves):
+            arr = np.load(os.path.join(path, name + ".npy"))
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"leaf {name}: checkpoint shape {arr.shape} != {want}")
+            out.append(shard_fn(name, arr) if shard_fn else arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, manifest["extra"]

@@ -1,0 +1,3 @@
+"""Architecture configs for the assigned (arch x shape) dry-run matrix."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+from repro.configs.registry import ARCH_IDS, all_configs, get_config

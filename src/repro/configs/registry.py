@@ -1,0 +1,33 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+ARCH_MODULES: dict[str, str] = {
+    "llama3-405b": "repro.configs.llama3_405b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+
+ARCH_IDS = list(ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}"
+        )
+    return importlib.import_module(ARCH_MODULES[arch_id]).get_config()
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,19 @@
+"""PiPNN core: the paper's contribution as composable JAX modules."""
+from repro.core.hashprune import (
+    Reservoir,
+    hashprune_batch,
+    hashprune_flat,
+    hashprune_merge,
+    hashprune_stream,
+    reservoir_init,
+)
+from repro.core.leaf import EdgeList, LeafParams, build_leaf_edges
+from repro.core.pipnn import PiPNNIndex, PiPNNParams, build, search
+from repro.core.rbc import RBCParams, ball_carve, leaves_to_padded, partition
+
+__all__ = [
+    "Reservoir", "hashprune_batch", "hashprune_flat", "hashprune_merge",
+    "hashprune_stream", "reservoir_init", "EdgeList", "LeafParams",
+    "build_leaf_edges", "PiPNNIndex", "PiPNNParams", "build", "search",
+    "RBCParams", "ball_carve", "leaves_to_padded", "partition",
+]

@@ -1,0 +1,16 @@
+"""Paper baselines (Sec. 5): Vamana (DiskANN), HNSW, HCNNG.
+
+These are the incremental, beam-search-driven builders whose *search
+bottleneck* PiPNN eliminates.  They are host-side algorithms by nature
+(pointer-chasing over a mutable graph); distance math is vectorized numpy.
+Used by the benchmark harness for build-time and QPS/recall comparisons.
+"""
+from repro.core.baselines.vamana import VamanaParams, build_vamana
+from repro.core.baselines.hnsw import HNSWParams, build_hnsw
+from repro.core.baselines.hcnng import HCNNGParams, build_hcnng
+
+__all__ = [
+    "VamanaParams", "build_vamana",
+    "HNSWParams", "build_hnsw",
+    "HCNNGParams", "build_hcnng",
+]

@@ -1,0 +1,197 @@
+"""PiPNN (Algorithm 4): partition -> pick -> HashPrune -> final prune.
+
+This is the host-orchestrated reference/build path used by tests, examples
+and benchmarks; the fully-static multi-pod SPMD build lives in
+``repro/launch/build_index.py`` and reuses the same stage functions.
+
+The build is deterministic under a fixed seed (Appendix A.8): RBC is
+deterministic given its RNG stream, and HashPrune is history-independent
+(Theorem 3.1), so the produced graph is unique regardless of leaf processing
+order — tests assert bit-identical rebuilds.
+
+Alpha scale note: ``metrics`` returns *squared* L2.  RobustPrune's alpha is
+specified on true distances in the paper (default 1.2); on squared
+distances the equivalent multiplier is alpha**2, which ``PiPNNParams``
+applies automatically for the l2 metric.  For MIPS (dissimilarity = -ip,
+sign-indefinite) alpha scaling is not meaningful and we use alpha=1.0, the
+standard DiskANN-MIPS practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as _sketch
+from repro.core.hashprune import Reservoir, hashprune_flat, INVALID_ID
+from repro.core.leaf import EdgeList, LeafParams, build_leaf_edges
+from repro.core.rbc import RBCParams, leaves_to_padded, partition
+from repro.core.robust_prune import final_prune
+
+
+@dataclasses.dataclass(frozen=True)
+class PiPNNParams:
+    rbc: RBCParams = dataclasses.field(default_factory=RBCParams)
+    leaf: LeafParams = dataclasses.field(default_factory=LeafParams)
+    partitioner: str = "rbc"
+    hash_bits: int = 12        # m hyperplanes (paper default 12, Fig. 13)
+    l_max: int = 64            # reservoir capacity (paper: 64..192)
+    final_prune: bool = True   # Sec. 4.3 (enabled by default in the paper)
+    alpha: float = 1.2         # on TRUE distance; squared for l2 internally
+    max_deg: int = 64          # final graph degree cap (paper's comparison deg)
+    metric: str = "l2"
+    seed: int = 0
+
+    def effective_alpha(self) -> float:
+        if self.metric == "l2":
+            return float(self.alpha) ** 2
+        if self.metric == "mips":
+            return 1.0
+        return float(self.alpha)
+
+    def with_(self, **kw) -> "PiPNNParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class PiPNNIndex:
+    graph: np.ndarray          # [n, max_deg] int32, -1 padded
+    dists: np.ndarray          # [n, max_deg] f32, +inf padded
+    start: int                 # entry point (medoid)
+    params: PiPNNParams
+    timings: dict[str, float]
+    stats: dict[str, Any]
+
+    @property
+    def n(self) -> int:
+        return self.graph.shape[0]
+
+    def average_degree(self) -> float:
+        return float((self.graph >= 0).sum() / self.graph.shape[0])
+
+
+def _hash_edges(
+    edges: EdgeList, sketches: np.ndarray
+) -> np.ndarray:
+    """Residual hashes h_src(dst) for every candidate edge, via sketches."""
+    safe_src = np.maximum(edges.src, 0)
+    safe_dst = np.maximum(edges.dst, 0)
+    h = np.asarray(
+        _sketch.hash_from_sketches(
+            jnp.asarray(sketches[safe_dst]), jnp.asarray(sketches[safe_src])
+        )
+    )
+    return h.astype(np.int32)
+
+
+def build(
+    x: np.ndarray,
+    params: PiPNNParams | None = None,
+    *,
+    leaves: list[np.ndarray] | None = None,
+    knn_fn: Callable | None = None,
+) -> PiPNNIndex:
+    """Build a PiPNN index over ``x`` [n, d] float32."""
+    from repro.core.beam_search import medoid  # local import, avoids cycle
+
+    params = params or PiPNNParams()
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    n, d = x.shape
+    timings: dict[str, float] = {}
+    stats: dict[str, Any] = {}
+
+    # --- Stage 1: overlapping partitioning (Sec. 4.1) ---------------------
+    t0 = time.perf_counter()
+    if leaves is None:
+        rbc = dataclasses.replace(params.rbc, metric=params.metric, seed=params.seed)
+        leaves = partition(x, rbc, params.partitioner)
+    padded = leaves_to_padded(leaves, params.rbc.c_max)
+    timings["partition"] = time.perf_counter() - t0
+    sizes = np.asarray([len(b) for b in leaves])
+    stats["n_leaves"] = len(leaves)
+    stats["leaf_size_mean"] = float(sizes.mean()) if len(sizes) else 0.0
+    stats["point_repeat"] = float(sizes.sum() / max(n, 1))
+    stats["pad_ratio"] = float(padded.size / max(sizes.sum(), 1))
+
+    # --- Stage 2: leaf building -> candidate edges (Sec. 4.2) -------------
+    t0 = time.perf_counter()
+    leaf = dataclasses.replace(params.leaf, metric=params.metric)
+    edges = build_leaf_edges(x, padded, leaf, knn_fn=knn_fn)
+    timings["build_leaves"] = time.perf_counter() - t0
+    stats["n_candidate_edges"] = int(edges.valid().sum())
+
+    # --- Stage 3: HashPrune (Sec. 3) ---------------------------------------
+    t0 = time.perf_counter()
+    import jax.random as jrandom
+
+    key = jrandom.PRNGKey(params.seed)
+    hyperplanes = _sketch.make_hyperplanes(key, params.hash_bits, d)
+    sketches = np.asarray(_sketch.sketch_jit(jnp.asarray(x), hyperplanes))
+    hashes = _hash_edges(edges, sketches)
+    src = np.where(edges.src >= 0, edges.src, n).astype(np.int32)
+    dst = np.where(edges.src >= 0, edges.dst, INVALID_ID).astype(np.int32)
+    dist = np.where(edges.src >= 0, edges.dist, np.inf).astype(np.float32)
+    res: Reservoir = hashprune_flat(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
+        jnp.asarray(dist), n_points=n, l_max=params.l_max,
+    )
+    timings["hashprune"] = time.perf_counter() - t0
+
+    # --- Stage 4: final prune (Sec. 4.3) -----------------------------------
+    t0 = time.perf_counter()
+    if params.final_prune:
+        graph, dists = final_prune(
+            x, res, alpha=params.effective_alpha(), max_deg=params.max_deg,
+            metric=params.metric,
+        )
+    else:
+        ids = np.asarray(res.ids)[:, : params.max_deg]
+        ds = np.asarray(res.dists)[:, : params.max_deg]
+        if ids.shape[1] < params.max_deg:
+            pad = params.max_deg - ids.shape[1]
+            ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            ds = np.pad(ds, ((0, 0), (0, pad)), constant_values=np.inf)
+        graph, dists = ids, ds
+    timings["final_prune"] = time.perf_counter() - t0
+    timings["total"] = sum(timings.values())
+
+    return PiPNNIndex(
+        graph=graph,
+        dists=dists,
+        start=medoid(x, seed=params.seed),
+        params=params,
+        timings=timings,
+        stats=stats,
+    )
+
+
+def search(
+    index: PiPNNIndex,
+    x: np.ndarray,
+    queries: np.ndarray,
+    *,
+    k: int = 10,
+    beam: int = 32,
+    batch: bool = True,
+) -> np.ndarray:
+    """Query the index; returns [Q, k] neighbor ids."""
+    from repro.core import beam_search as bs
+
+    if batch:
+        iters = beam + 4
+        ids, _ = bs.beam_search_batch(
+            jnp.asarray(index.graph), jnp.asarray(x), jnp.asarray(queries),
+            start=index.start, beam=beam, iters=iters, metric=index.params.metric,
+        )
+        return np.asarray(ids)[:, :k]
+    out = np.empty((queries.shape[0], k), dtype=np.int64)
+    for i, q in enumerate(queries):
+        ids, _, _ = bs.beam_search_np(
+            index.graph, x, q, start=index.start, beam=beam,
+            metric=index.params.metric,
+        )
+        out[i] = ids[:k] if len(ids) >= k else np.pad(ids, (0, k - len(ids)), constant_values=-1)
+    return out

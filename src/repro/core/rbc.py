@@ -1,0 +1,283 @@
+"""Overlapping partitioning for PiPNN (Sec. 4.1, Algorithm 5, Appendix A.1).
+
+The production partitioner is Randomized Ball Carving (RBC) with *multi-level
+fanout*: in each subproblem sample ``l = min(P_samp * |P|, leader_cap)``
+leaders, assign every point to its ``fanout(depth)`` nearest leaders, recurse
+on subproblems larger than ``C_max``; merge subproblems smaller than
+``C_min``.  Fanout>1 at the top level(s) replaces whole-procedure replication
+(Appendix A.2's cost analysis) — the paper observes recursion depth 2–3
+suffices in practice because arity is ~1000.
+
+Also implemented (for the Appendix A.1 ablation benchmarks):
+  * binary partitioning (HCNNG style) — 2 random leaders, no fanout analog;
+  * hierarchical k-means — leaders chosen by Lloyd iterations instead of
+    uniformly at random;
+  * sorting-LSH — concatenated hyperplane hashes, lexicographic sort,
+    consecutive groups of <= C_max (replication, not fanout).
+
+Orchestration is host-side (recursion over variable-size subproblems is
+data-dependent); the inner distance math is a single GEMM per (subproblem,
+leaders) pair.  The fully-static distributed two-level variant used for the
+multi-pod dry-run lives in ``repro/launch/build_index.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal, Sequence
+
+import numpy as np
+
+from repro.core import metrics as _metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class RBCParams:
+    c_max: int = 1024          # max leaf size (paper: 1024-2048)
+    c_min: int = 64            # min leaf size before merging
+    p_samp: float = 0.01       # leader fraction per subproblem
+    leader_cap: int = 1000     # hard cap on leaders per subproblem (paper: 1000)
+    fanout: Sequence[int] = (10, 3)  # fanout(depth); 1 past the schedule
+    replicas: int = 1          # independent RBC runs (quality knob, Sec. 5.2)
+    metric: str = "l2"
+    seed: int = 0
+
+    def fanout_at(self, depth: int) -> int:
+        return self.fanout[depth] if depth < len(self.fanout) else 1
+
+
+def _pairwise_np(a: np.ndarray, b: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side GEMM-expansion distance matrix (numpy mirror of metrics.pairwise)."""
+    ip = a @ b.T
+    if metric == "mips":
+        return -ip
+    if metric == "cosine":
+        an = np.linalg.norm(a, axis=-1, keepdims=True)
+        bn = np.linalg.norm(b, axis=-1, keepdims=True)
+        return 1.0 - ip / np.maximum(an * bn.T, 1e-30)
+    a2 = np.sum(a * a, axis=-1)[:, None]
+    b2 = np.sum(b * b, axis=-1)[None, :]
+    return np.maximum(a2 + b2 - 2.0 * ip, 0.0)
+
+
+def _nearest_leaders(
+    x: np.ndarray, leaders: np.ndarray, k: int, metric: str
+) -> np.ndarray:
+    """Indices [n, k] of the k nearest leaders for each row of x."""
+    d = _pairwise_np(x, leaders, metric)
+    k = min(k, leaders.shape[0])
+    if k == 1:
+        return np.argmin(d, axis=1)[:, None]
+    part = np.argpartition(d, k - 1, axis=1)[:, :k]
+    # order the k by distance for determinism
+    rows = np.arange(x.shape[0])[:, None]
+    order = np.argsort(d[rows, part], axis=1, kind="stable")
+    return part[rows, order]
+
+
+def _merge_small(
+    buckets: list[np.ndarray], c_min: int, c_max: int, rng: np.random.Generator
+) -> list[np.ndarray]:
+    """Randomly merge buckets smaller than c_min, never exceeding c_max."""
+    small = [b for b in buckets if len(b) < c_min]
+    keep = [b for b in buckets if len(b) >= c_min]
+    if not small:
+        return keep
+    order = rng.permutation(len(small))
+    cur: list[np.ndarray] = []
+    cur_len = 0
+    for j in order:
+        b = small[j]
+        if cur_len + len(b) > c_max and cur:
+            # dedupe: fanout may place a point in several merged buckets
+            keep.append(np.unique(np.concatenate(cur)))
+            cur, cur_len = [], 0
+        cur.append(b)
+        cur_len += len(b)
+    if cur:
+        keep.append(np.unique(np.concatenate(cur)))
+    return keep
+
+
+def ball_carve(
+    x: np.ndarray, params: RBCParams, *, seed: int | None = None
+) -> list[np.ndarray]:
+    """Algorithm 5. Returns leaves as arrays of point indices (overlapping)."""
+    rng = np.random.default_rng(params.seed if seed is None else seed)
+    n = x.shape[0]
+    leaves: list[np.ndarray] = []
+    # worklist of (point-index-array, depth)
+    stack: list[tuple[np.ndarray, int]] = [(np.arange(n, dtype=np.int64), 0)]
+    while stack:
+        idx, depth = stack.pop()
+        if len(idx) <= params.c_max:
+            leaves.append(idx)
+            continue
+        n_leaders = int(
+            np.clip(round(params.p_samp * len(idx)), 2, params.leader_cap)
+        )
+        leader_pos = rng.choice(len(idx), size=n_leaders, replace=False)
+        leaders = x[idx[leader_pos]]
+        f = min(params.fanout_at(depth), n_leaders)
+        assign = _nearest_leaders(x[idx], leaders, f, params.metric)  # [m, f]
+        buckets: list[np.ndarray] = []
+        flat = assign.reshape(-1)
+        src = np.repeat(idx, f)
+        order = np.argsort(flat, kind="stable")
+        flat_sorted, src_sorted = flat[order], src[order]
+        starts = np.searchsorted(flat_sorted, np.arange(n_leaders))
+        ends = np.searchsorted(flat_sorted, np.arange(n_leaders) + 1)
+        for s, e in zip(starts, ends):
+            if e > s:
+                buckets.append(src_sorted[s:e])
+        buckets = _merge_small(buckets, params.c_min, params.c_max, rng)
+        for b in buckets:
+            if len(b) > params.c_max:
+                stack.append((b, depth + 1))
+            else:
+                leaves.append(b)
+    return leaves
+
+
+def ball_carve_replicated(x: np.ndarray, params: RBCParams) -> list[np.ndarray]:
+    """``params.replicas`` independent RBC runs; union of leaves (Sec. 5.2)."""
+    leaves: list[np.ndarray] = []
+    for r in range(params.replicas):
+        leaves.extend(ball_carve(x, params, seed=params.seed + 7919 * r))
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# Ablation partitioners (Appendix A.1)
+# ---------------------------------------------------------------------------
+
+def binary_partition(
+    x: np.ndarray,
+    *,
+    c_max: int = 1024,
+    replicas: int = 1,
+    metric: str = "l2",
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """HCNNG's recursive 2-leader partitioning (A.1.1). Disjoint per replica."""
+    leaves: list[np.ndarray] = []
+    for r in range(replicas):
+        rng = np.random.default_rng(seed + 104729 * r)
+        stack = [np.arange(x.shape[0], dtype=np.int64)]
+        while stack:
+            idx = stack.pop()
+            if len(idx) <= c_max:
+                leaves.append(idx)
+                continue
+            two = rng.choice(len(idx), size=2, replace=False)
+            d = _pairwise_np(x[idx], x[idx[two]], metric)
+            left = d[:, 0] <= d[:, 1]
+            # guard: degenerate split (duplicate points) -> random halves
+            if left.all() or (~left).all():
+                left = rng.random(len(idx)) < 0.5
+            stack.append(idx[left])
+            stack.append(idx[~left])
+    return leaves
+
+
+def _lloyd(x: np.ndarray, k: int, iters: int, rng, metric: str) -> np.ndarray:
+    centers = x[rng.choice(x.shape[0], size=k, replace=False)].copy()
+    for _ in range(iters):
+        a = np.argmin(_pairwise_np(x, centers, metric), axis=1)
+        for j in range(k):
+            m = a == j
+            if m.any():
+                centers[j] = x[m].mean(axis=0)
+    return centers
+
+
+def kmeans_carve(
+    x: np.ndarray, params: RBCParams, *, lloyd_iters: int = 3, seed: int | None = None
+) -> list[np.ndarray]:
+    """Hierarchical k-means (A.1.2): RBC but leaders are Lloyd centroids."""
+    rng = np.random.default_rng(params.seed if seed is None else seed)
+    leaves: list[np.ndarray] = []
+    stack: list[tuple[np.ndarray, int]] = [(np.arange(x.shape[0], dtype=np.int64), 0)]
+    while stack:
+        idx, depth = stack.pop()
+        if len(idx) <= params.c_max:
+            leaves.append(idx)
+            continue
+        n_leaders = int(np.clip(round(params.p_samp * len(idx)), 2, params.leader_cap))
+        centers = _lloyd(x[idx], n_leaders, lloyd_iters, rng, params.metric)
+        f = min(params.fanout_at(depth), n_leaders)
+        assign = _nearest_leaders(x[idx], centers, f, params.metric)
+        flat = assign.reshape(-1)
+        src = np.repeat(idx, f)
+        order = np.argsort(flat, kind="stable")
+        flat_sorted, src_sorted = flat[order], src[order]
+        buckets = []
+        starts = np.searchsorted(flat_sorted, np.arange(n_leaders))
+        ends = np.searchsorted(flat_sorted, np.arange(n_leaders) + 1)
+        for s, e in zip(starts, ends):
+            if e > s:
+                buckets.append(src_sorted[s:e])
+        buckets = _merge_small(buckets, params.c_min, params.c_max, rng)
+        for b in buckets:
+            (stack.append((b, depth + 1)) if len(b) > params.c_max
+             else leaves.append(b))
+    return leaves
+
+
+def sorting_lsh_partition(
+    x: np.ndarray,
+    *,
+    c_max: int = 1024,
+    n_bits: int = 24,
+    replicas: int = 1,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Sorting-LSH (A.1.3): lexicographic sort on concatenated hyperplane
+    bits, consecutive groups of <= c_max.  Overlap via replication only."""
+    leaves: list[np.ndarray] = []
+    n, d = x.shape
+    for r in range(replicas):
+        rng = np.random.default_rng(seed + 15485863 * r)
+        h = rng.standard_normal((n_bits, d)).astype(x.dtype)
+        bits = (x @ h.T) >= 0.0  # [n, n_bits]
+        # pack bits -> big-endian integer keys (lexicographic == numeric)
+        key = np.zeros(n, dtype=np.float64)
+        for i in range(n_bits):
+            key = key * 2 + bits[:, i]
+        order = np.argsort(key, kind="stable")
+        for s in range(0, n, c_max):
+            leaves.append(order[s : s + c_max].astype(np.int64))
+    return leaves
+
+
+PARTITIONERS: dict[str, Callable] = {
+    "rbc": lambda x, p: ball_carve_replicated(x, p),
+    "binary": lambda x, p: binary_partition(
+        x, c_max=p.c_max, replicas=max(p.replicas, 1), metric=p.metric, seed=p.seed
+    ),
+    "kmeans": lambda x, p: kmeans_carve(x, p),
+    "sorting_lsh": lambda x, p: sorting_lsh_partition(
+        x, c_max=p.c_max, replicas=max(p.replicas, 1), seed=p.seed
+    ),
+}
+
+
+def partition(
+    x: np.ndarray, params: RBCParams, method: Literal["rbc", "binary", "kmeans", "sorting_lsh"] = "rbc"
+) -> list[np.ndarray]:
+    return PARTITIONERS[method](x, params)
+
+
+def leaves_to_padded(
+    leaves: list[np.ndarray], c_max: int
+) -> np.ndarray:
+    """Stack leaves into a dense [L, c_max] int32 matrix, -1 padded.
+
+    This is the TPU-facing representation: every leaf becomes one row of a
+    regular batch so all-leaf distance matrices are a single batched GEMM.
+    """
+    out = np.full((len(leaves), c_max), -1, dtype=np.int32)
+    for i, b in enumerate(leaves):
+        if len(b) > c_max:
+            raise ValueError(f"leaf {i} larger than c_max ({len(b)} > {c_max})")
+        out[i, : len(b)] = b
+    return out

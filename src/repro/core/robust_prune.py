@@ -1,0 +1,159 @@
+"""RobustPrune (Algorithm 2, Vamana's α-pruning kernel).
+
+Three forms:
+  * ``robust_prune_np``   — faithful sequential reference (numpy); used by the
+    Vamana baseline's incremental build and as the oracle in tests.
+  * ``robust_prune_mask`` — batch-vectorized greedy over a fixed candidate
+    budget (jax.lax.scan over candidate ranks, all points in parallel).
+    Semantics identical to the sequential version given the same candidate
+    ordering (ascending (dist, id)).
+  * ``final_prune``       — PiPNN's final pass (Sec. 4.3): RobustPrune each
+    point's HashPrune reservoir (<= l_max candidates, so the O(l^2)
+    candidate-candidate distance matrix is tiny).
+
+The paper's 'lazy' variant (App. A.3.3) defers dominance checks to insertion
+time; on TPU the batch form already evaluates all dominance tests as dense
+masked arithmetic, which subsumes the laziness trick (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as _metrics
+from repro.core.hashprune import Reservoir, INVALID_ID
+
+
+def robust_prune_np(
+    p: np.ndarray,
+    cand_ids: np.ndarray,
+    x: np.ndarray,
+    *,
+    alpha: float = 1.2,
+    r: int = 64,
+    metric: str = "l2",
+) -> np.ndarray:
+    """Sequential Algorithm 2.  Returns kept candidate ids (<= r)."""
+    cand_ids = np.unique(cand_ids[cand_ids >= 0])
+    if cand_ids.size == 0:
+        return cand_ids
+    c = x[cand_ids]
+    if metric == "mips":
+        d_pc = -(c @ p)
+    elif metric == "cosine":
+        d_pc = 1.0 - (c @ p) / np.maximum(
+            np.linalg.norm(c, axis=1) * np.linalg.norm(p), 1e-30
+        )
+    else:
+        diff = c - p[None, :]
+        d_pc = np.sum(diff * diff, axis=1)
+    order = np.lexsort((cand_ids, d_pc))  # (dist, id)
+    kept: list[int] = []
+    kept_vecs: list[np.ndarray] = []
+    alive = np.ones(len(cand_ids), dtype=bool)
+    for oi in order:
+        if not alive[oi]:
+            continue
+        kept.append(cand_ids[oi])
+        kept_vecs.append(c[oi])
+        if len(kept) >= r:
+            break
+        # prune candidates dominated by the newly kept point
+        if metric == "mips":
+            d_jc = -(c @ c[oi])
+        elif metric == "cosine":
+            d_jc = 1.0 - (c @ c[oi]) / np.maximum(
+                np.linalg.norm(c, axis=1) * np.linalg.norm(c[oi]), 1e-30
+            )
+        else:
+            diff = c - c[oi][None, :]
+            d_jc = np.sum(diff * diff, axis=1)
+        alive &= ~(alpha * d_jc <= d_pc)
+    return np.asarray(kept, dtype=np.int64)
+
+
+def _prune_step(carry, r_idx, *, alpha, max_deg):
+    """One greedy rank step for all points at once."""
+    alive, count, keep, d_pc, d_cc, order = carry
+    b = jnp.arange(d_pc.shape[0])
+    j = order[:, r_idx]                        # [B] candidate index at this rank
+    valid = jnp.isfinite(d_pc[b, j]) & alive[b, j] & (count < max_deg)
+    keep = keep.at[b, j].set(keep[b, j] | valid)
+    count = count + valid.astype(jnp.int32)
+    # dominance: alpha * d(j, c) <= d(p, c)  (squared-L2 note: alpha applies
+    # to the stored dissimilarity, matching the baseline implementations)
+    dom = alpha * d_cc[b, j, :] <= d_pc       # [B, C]
+    alive = alive & ~(dom & valid[:, None])
+    return (alive, count, keep, d_pc, d_cc, order), None
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "max_deg"))
+def robust_prune_mask(
+    d_pc: jax.Array,   # [B, C] point->candidate dissimilarity (+inf invalid)
+    d_cc: jax.Array,   # [B, C, C] candidate->candidate dissimilarity
+    cand_ids: jax.Array,  # [B, C] for deterministic tie-breaking
+    *,
+    alpha: float = 1.2,
+    max_deg: int = 64,
+) -> jax.Array:
+    """Vectorized RobustPrune.  Returns keep mask [B, C]."""
+    bsz, c = d_pc.shape
+    # order by (dist, id): scale-free lexicographic via sort of packed keys
+    big = jnp.where(cand_ids == INVALID_ID, jnp.int32(2**30), cand_ids)
+    _, _, order = jax.lax.sort(
+        (d_pc, big, jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (bsz, c))),
+        dimension=-1,
+        num_keys=2,
+    )
+    alive = jnp.isfinite(d_pc)
+    keep = jnp.zeros_like(alive)
+    count = jnp.zeros((bsz,), dtype=jnp.int32)
+    step = functools.partial(_prune_step, alpha=alpha, max_deg=max_deg)
+    (alive, count, keep, *_), _ = jax.lax.scan(
+        step, (alive, count, keep, d_pc, d_cc, order), jnp.arange(c)
+    )
+    return keep
+
+
+def final_prune(
+    x: jax.Array,
+    res: Reservoir,
+    *,
+    alpha: float = 1.2,
+    max_deg: int = 64,
+    metric: str = "l2",
+    chunk: int = 2048,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sec. 4.3 final pass: RobustPrune every reservoir.
+
+    Returns (adjacency [n, max_deg] int32 with -1 padding,
+             dists     [n, max_deg] f32 with +inf padding).
+    """
+    n, l = res.ids.shape
+    x = jnp.asarray(x)
+    out_ids = np.full((n, max_deg), -1, dtype=np.int32)
+    out_d = np.full((n, max_deg), np.inf, dtype=np.float32)
+
+    @jax.jit
+    def _chunk(ids, dists):
+        safe = jnp.maximum(ids, 0)
+        cvecs = x[safe]                                     # [B, L, d]
+        d_cc = jax.vmap(lambda a: _metrics.pairwise(a, a, metric))(cvecs)
+        d_pc = jnp.where(ids == INVALID_ID, jnp.inf, dists)
+        keep = robust_prune_mask(d_pc, d_cc, ids, alpha=alpha, max_deg=max_deg)
+        # compact kept entries to the front: sort by (dist-if-kept, id)
+        k_d = jnp.where(keep, d_pc, jnp.inf)
+        s_d, s_i = jax.lax.sort((k_d, ids), dimension=-1, num_keys=2)
+        return s_i[:, :max_deg], s_d[:, :max_deg]
+
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        si, sd = _chunk(res.ids[s:e], res.dists[s:e])
+        w = min(max_deg, l)
+        out_ids[s:e, :w] = np.asarray(si)[:, :w]
+        out_d[s:e, :w] = np.asarray(sd)[:, :w]
+    out_ids[~np.isfinite(out_d)] = -1
+    return out_ids, out_d

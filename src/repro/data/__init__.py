@@ -1,0 +1,5 @@
+"""Deterministic, shardable, resumable data pipelines."""
+from repro.data.pipeline import (
+    TokenPipeline, TokenPipelineConfig, VectorPipelineConfig,
+    make_queries, make_vectors,
+)

@@ -1,0 +1,3 @@
+"""Distribution: sharding rules, gradient compression, fault tolerance,
+elastic scaling."""
+from repro.distributed import compression, elastic, fault_tolerance, sharding

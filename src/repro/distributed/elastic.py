@@ -1,0 +1,45 @@
+"""Elastic scaling: restore any checkpoint onto any live mesh.
+
+Checkpoints hold logical (unsharded) arrays; this module provides the
+shard_fn that Checkpointer.restore uses to lay each leaf out on the
+current mesh according to the family's sharding rules.  Scaling 256 -> 512
+chips (pod join) or 512 -> 256 (pod loss) is therefore a restart with a
+different ``make_production_mesh`` call — no resharding tool needed.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as shd
+
+
+def restore_to_mesh(
+    checkpointer, step: int, like: Any, mesh: Mesh, family: str,
+    policy: str = "fsdp_tp",
+) -> tuple[Any, dict]:
+    """Restore checkpoint ``step`` resharded onto ``mesh``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    spec_by_name = {}
+    for path, leaf in flat:
+        name = "_".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        spec_by_name[name] = shd.param_spec(name, leaf, mesh, family, policy)
+
+    def shard_fn(name: str, arr: np.ndarray):
+        spec = spec_by_name.get(name)
+        if spec is None:
+            return jax.device_put(arr)
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    return checkpointer.restore(step, like, shard_fn=shard_fn)
+
+
+def data_shard_slice(global_batch: int, mesh: Mesh) -> int:
+    """Per-data-rank batch after a re-scale (pipeline re-split)."""
+    ranks = int(np.prod([mesh.shape[a] for a in shd.data_axes(mesh)]))
+    assert global_batch % ranks == 0
+    return global_batch // ranks

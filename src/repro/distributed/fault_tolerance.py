@@ -1,0 +1,93 @@
+"""Fault tolerance + elasticity for long multi-pod runs.
+
+What actually breaks at 1000+ nodes and what this module does about it:
+
+  * **Preemption / node loss** -> checkpoint/restart.  ``RunGuard``
+    installs SIGTERM/SIGINT handlers that request a final blocking
+    checkpoint at the next step boundary; the training loop polls
+    ``should_stop``.  On startup ``resume_or_init`` restores the newest
+    committed checkpoint (data-pipeline counters included, so the token
+    stream continues exactly where it left off — the pipeline is
+    counter-based, Sec. data/pipeline.py).
+  * **Corrupted / partial writes** -> the Checkpointer's atomic COMMIT
+    protocol; restore only ever sees committed snapshots.
+  * **Stragglers** -> ``StepWatchdog`` tracks a rolling step-time
+    distribution and flags steps slower than ``k`` sigma (logging + a
+    callback hook, e.g. to evict a node via the cluster scheduler).  At
+    the JAX level, per-step work is fully synchronous SPMD, so detection +
+    eviction + elastic restart is the mitigation path (same policy as
+    Borg/MaxText production runs).
+  * **Elastic re-scale** -> checkpoints store logical arrays;
+    ``elastic.restore_to_mesh`` reshards them onto the live mesh, and the
+    counter-based pipeline re-splits the batch across the new data ranks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+class RunGuard:
+    """Cooperative preemption: flips ``should_stop`` on SIGTERM/SIGINT."""
+
+    def __init__(self, install_handlers: bool = True):
+        self.should_stop = False
+        self._prev = {}
+        if install_handlers:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:  # non-main thread (tests)
+                    pass
+
+    def _handler(self, signum, frame):
+        self.should_stop = True
+
+    def restore_handlers(self):
+        for sig, h in self._prev.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Rolling straggler detector over synchronous step times."""
+
+    window: int = 50
+    sigma: float = 4.0
+    min_samples: int = 10
+    on_straggler: Callable[[int, float, float], None] | None = None
+    _times: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=50))
+    flagged: list[tuple[int, float]] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        is_straggler = False
+        if len(self._times) >= self.min_samples:
+            mu = float(np.mean(self._times))
+            sd = float(np.std(self._times)) + 1e-9
+            if seconds > mu + self.sigma * sd and seconds > 1.5 * mu:
+                is_straggler = True
+                self.flagged.append((step, seconds))
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, mu)
+        self._times.append(seconds)
+        return is_straggler
+
+
+def resume_or_init(
+    checkpointer, init_fn: Callable[[], Any], like_fn: Callable[[], Any]
+) -> tuple[Any, int, dict]:
+    """Restore the newest committed checkpoint or initialize fresh.
+
+    Returns (state, start_step, extra)."""
+    latest = checkpointer.latest_step()
+    if latest is None:
+        return init_fn(), 0, {}
+    state, extra = checkpointer.restore(latest, like_fn())
+    return state, latest, extra

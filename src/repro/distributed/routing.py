@@ -1,0 +1,53 @@
+"""Capacity-routed group-by: the MoE-dispatch-shaped primitive shared by
+the distributed PiPNN build (point-replica / candidate-edge routing) and
+the expert-parallel MoE layer (token routing).
+
+Sort-based (the TPU idiom): stable-sort by key, rank within each key run,
+drop rank >= cap (overflow), scatter into [n_groups, cap, ...].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID_ID = jnp.int32(-1)
+INF = jnp.float32(jnp.inf)
+
+
+def group_by_capacity(keys: jax.Array, valid: jax.Array, n_groups: int,
+                      cap: int, payloads: list[jax.Array],
+                      shuffle: bool = False
+                      ) -> tuple[list[jax.Array], jax.Array]:
+    """Scatter flat entries into [n_groups, cap, ...] buckets.
+
+    Returns (grouped payloads, valid mask [n_groups, cap]); int payloads
+    pad with -1, float payloads with +inf.  ``shuffle=True`` pre-permutes
+    entries with a fixed Weyl sequence so overflow drops are unbiased
+    instead of systematically hitting the highest-index entries.
+    """
+    e = keys.shape[0]
+    if shuffle:
+        perm = jnp.argsort(
+            (jnp.arange(e, dtype=jnp.uint32) * jnp.uint32(2654435761)))
+        keys, valid = keys[perm], valid[perm]
+        payloads = [p[perm] for p in payloads]
+    skey = jnp.where(valid, keys, n_groups).astype(jnp.int32)
+    order = jnp.argsort(skey, stable=True)
+    skey = skey[order]
+    idx = jnp.arange(e, dtype=jnp.int32)
+    start = skey != jnp.roll(skey, 1)
+    start = start.at[0].set(True)
+    run_start = jax.lax.cummax(jnp.where(start, idx, 0))
+    rank = idx - run_start
+    ok = (rank < cap) & (skey < n_groups)
+    row = jnp.where(ok, skey, n_groups)
+    col = jnp.where(ok, rank, cap)
+
+    out_valid = jnp.zeros((n_groups, cap), bool).at[row, col].set(
+        True, mode="drop")
+    outs = []
+    for pay in payloads:
+        pad = INVALID_ID if jnp.issubdtype(pay.dtype, jnp.integer) else INF
+        buf = jnp.full((n_groups, cap) + pay.shape[1:], pad, pay.dtype)
+        outs.append(buf.at[row, col].set(pay[order], mode="drop"))
+    return outs, out_valid

@@ -1,0 +1,225 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs per
+architecture family on the production mesh axes ("pod", "data", "model").
+
+Strategy (DESIGN.md §4):
+  * params: FSDP over the data axes (+pod), TP over `model`:
+      - attention projections: shard the flattened head dim over `model`,
+        d_model over (`pod`,`data`)  (ZeRO-3-style weight gathering is
+        XLA SPMD's job);
+      - MLP: d_ff over `model`;
+      - embedding/unembedding: vocab over `model`, d_model over data;
+      - MoE EP (experts % model == 0): experts over `model`;
+        MoE TP (otherwise): d_ff-within-expert over `model`;
+      - Mamba2: d_inner-derived projection columns over `model`;
+      - norms / small vectors: replicated.
+  * activations: batch over (`pod`,`data`); residual d_model unsharded
+    (GSPMD inserts the TP collectives at the projections).
+  * KV caches: batch over data where divisible, SEQUENCE over `model`
+    (flash-decode style) so 500k-token caches fit per-chip HBM.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# Parallelism policies (per-arch, ArchConfig.parallelism):
+#   fsdp_tp — params FSDP over (pod,data) + TP over `model` (attention
+#             heads / d_ff / vocab).  Right for >=70B dense where TP is
+#             needed to fit and activation all-reduces amortize.
+#   fsdp    — pure ZeRO-3: params sharded over ALL axes, batch over all
+#             axes when divisible.  No activation all-reduces at all; the
+#             only collectives are per-layer weight all-gathers (+ grad
+#             reduce-scatters).  Right for <=20B dense: the §Perf pass
+#             measured TP-16 costing 100x more wire than FSDP here.
+#   ep_dp   — MoE: expert stacks over `model` (EP), everything else FSDP
+#             over (pod,data), batch over all axes when divisible (the
+#             token->expert all_to_all is the dominant collective, as it
+#             should be).
+POLICIES = ("fsdp_tp", "fsdp", "ep_dp")
+
+
+def _dim_ok(dim: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """Shard dim over axes when divisible, else replicate that dim."""
+    return axes if _dim_ok(dim, mesh, axes) else None
+
+
+def param_spec(name: str, leaf: Any, mesh: Mesh, family: str,
+               policy: str = "fsdp_tp") -> P:
+    """Map a flattened param name + abstract leaf to a PartitionSpec."""
+    da = data_axes(mesh)
+    shape = leaf.shape
+    if len(shape) <= 1:
+        return P()
+
+    if policy in ("fsdp", "ep_dp"):
+        # MoE expert stacks keep EP over `model` under ep_dp
+        if policy == "ep_dp" and re.search(r"(w_gate|w_up|w_down)$", name) \
+                and len(shape) == 4:
+            return P(None, _maybe(shape[1], mesh, "model"),
+                     _maybe(shape[2], mesh, da), None)
+        # ZeRO-3: shard the largest dim over every available axis
+        axes = all_axes(mesh) if policy == "fsdp" else da
+        stacked = len(shape) >= 3
+        lead = 1 if stacked else 0
+        dims = shape[lead:]
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        spec = [None] * len(dims)
+        for i in order:
+            if _dim_ok(dims[i], mesh, axes):
+                spec[i] = axes
+                break
+        else:
+            if _dim_ok(dims[order[0]], mesh, da):
+                spec[order[0]] = da
+        return P(*(None,) * lead, *spec)
+
+    def spec2(rows_axes, cols_axes, extra_lead=0):
+        """Spec for a (maybe layer-stacked) 2D matrix."""
+        lead = (None,) * extra_lead
+        return P(*lead, rows_axes, cols_axes)
+
+    stacked = len(shape) >= 3  # leading layer dim from vmap-init
+    lead = 1 if stacked else 0
+    r, c = shape[-2], shape[-1]
+
+    # embedding table [vocab, d]
+    if "embed" in name and "table" in name:
+        return P(_maybe(r, mesh, "model"), _maybe(c, mesh, da))
+    # MoE expert stacks [L, E, d, ff] / [L, E, ff, d]
+    if re.search(r"(w_gate|w_up|w_down)$", name) and len(shape) == 4:
+        e = shape[1]
+        if _dim_ok(e, mesh, "model"):      # EP
+            return P(None, "model", _maybe(shape[2], mesh, da), None)
+        # TP inside experts: shard the ff dim
+        if "w_down" in name:
+            return P(None, None, _maybe(shape[2], mesh, "model"),
+                     _maybe(shape[3], mesh, da))
+        return P(None, None, _maybe(shape[2], mesh, da),
+                 _maybe(shape[3], mesh, "model"))
+    # router [d, E]
+    if "router" in name:
+        return P(*(None,) * lead, _maybe(r, mesh, da), None)
+    # attention projections: wq/wk/wv [.., d, H*hd]; wo [.., H*hd, d]
+    if re.search(r"w[qkv]_w$|w[qkv]$", name) or "_wq" in name or \
+            re.search(r"attn.*w[qkv]", name) or re.search(r"cross.*w[qkv]", name):
+        return spec2(_maybe(r, mesh, da), _maybe(c, mesh, "model"), lead)
+    if "wo" in name:
+        return spec2(_maybe(r, mesh, "model"), _maybe(c, mesh, da), lead)
+    # MLP [.., d, ff] up/gate ; [.., ff, d] down
+    if "w_up" in name or "w_gate" in name:
+        return spec2(_maybe(r, mesh, da), _maybe(c, mesh, "model"), lead)
+    if "w_down" in name:
+        return spec2(_maybe(r, mesh, "model"), _maybe(c, mesh, da), lead)
+    # mamba in_proj [.., d, d_proj] / out_proj [.., d_inner, d]
+    if "in_proj" in name:
+        return spec2(_maybe(r, mesh, da), _maybe(c, mesh, "model"), lead)
+    if "out_proj" in name:
+        return spec2(_maybe(r, mesh, "model"), _maybe(c, mesh, da), lead)
+    if "conv_w" in name:
+        return P(*(None,) * lead, None, _maybe(c, mesh, "model"))
+    # fallback: replicate
+    return P(*(None,) * len(shape))
+
+
+def params_shardings(params: Any, mesh: Mesh, family: str,
+                     policy: str = "fsdp_tp") -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "_".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append(NamedSharding(
+            mesh, param_spec(name, leaf, mesh, family, policy)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_spec(name: str, leaf: Any, mesh: Mesh,
+               policy: str = "fsdp_tp") -> P:
+    da = data_axes(mesh)
+    shape = leaf.shape
+    # fsdp / ep_dp: the model axis carries batch too (when divisible) —
+    # there is no tensor parallelism to feed, so idle replicas would
+    # otherwise duplicate all compute.
+    axes = all_axes(mesh) if policy in ("fsdp", "ep_dp") else da
+    if name == "positions":                       # [3, B, T]
+        b_ax = axes if _dim_ok(shape[1], mesh, axes) else             (da if _dim_ok(shape[1], mesh, da) else None)
+        return P(None, b_ax, None)
+    if len(shape) >= 1:
+        if _dim_ok(shape[0], mesh, axes):
+            return P(axes, *(None,) * (len(shape) - 1))
+        if _dim_ok(shape[0], mesh, da):
+            return P(da, *(None,) * (len(shape) - 1))
+    return P(*(None,) * len(shape))
+
+
+def batch_shardings(batch: Any, mesh: Mesh,
+                    policy: str = "fsdp_tp") -> Any:
+    return {
+        k: NamedSharding(mesh, batch_spec(k, v, mesh, policy))
+        for k, v in batch.items()
+    }
+
+
+def cache_spec(name: str, leaf: Any, mesh: Mesh,
+               policy: str = "fsdp_tp") -> P:
+    """KV / SSM cache shardings for serving.
+
+    Batch over as many axes as divide it (all axes under the fsdp
+    policies); whatever axis is left UNUSED by the batch dim shards the
+    sequence / head / channel dim — never both (a single spec may not
+    repeat a mesh axis).
+    """
+    shape = leaf.shape
+    if name == "index" or len(shape) == 0:
+        return P()
+    da = data_axes(mesh)
+    aa = all_axes(mesh)
+
+    def batch_and_rest(bdim: int):
+        if policy in ("fsdp", "ep_dp") and _dim_ok(bdim, mesh, aa):
+            return aa, None                 # batch takes everything
+        b_ax = da if _dim_ok(bdim, mesh, da) else None
+        rest = "model" if "model" in mesh.axis_names else None
+        return b_ax, rest
+
+    if name in ("k", "v", "cross_k", "cross_v"):  # [L, B, S, KV, hd]
+        b_ax, rest = batch_and_rest(shape[1])
+        return P(None, b_ax, _maybe(shape[2], mesh, rest) if rest else None,
+                 None, None)
+    if name == "conv":                            # [L, B, W-1, conv_dim]
+        b_ax, rest = batch_and_rest(shape[1])
+        return P(None, b_ax, None,
+                 _maybe(shape[3], mesh, rest) if rest else None)
+    if name == "ssm":                             # [L, B, H, P, N]
+        b_ax, rest = batch_and_rest(shape[1])
+        return P(None, b_ax,
+                 _maybe(shape[2], mesh, rest) if rest else None, None, None)
+    return P(*(None,) * len(shape))
+
+
+def cache_shardings(cache: Any, mesh: Mesh,
+                    policy: str = "fsdp_tp") -> Any:
+    return type(cache)(*[
+        NamedSharding(mesh, cache_spec(f, getattr(cache, f), mesh, policy))
+        for f in cache._fields
+    ])

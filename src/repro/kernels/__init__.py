@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for PiPNN's compute hot spots.
+
+distance.py  — batched pairwise distance matrices (MXU GEMM + fused norms),
+               f32/bf16 and int8 (paper Sec. 6 future work) variants.
+leaf_knn.py  — FlashKNN: fused distances + running top-k, never materializes
+               the C_max^2 leaf matrix in HBM (beyond-paper optimization).
+topk.py      — batched row-wise partial top-k (VQPartialSort analogue).
+edge_hash.py — fused residual-hash bit packing (paper Eq. 1).
+ops.py       — jit'd wrappers; ref.py — pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    edge_hashes,
+    leaf_topk,
+    make_knn_fn,
+    pairwise_distance,
+    pairwise_distance_int8,
+    rowwise_topk,
+)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: batched pairwise distance matrices.
+
+The paper's hot loop (Sec. 4.2): all-pairs distances inside each leaf via
+GEMM.  On TPU this is an MXU kernel: grid over (leaf, row-tile, col-tile);
+each step loads a [bm, d] row tile and [bn, d] col tile into VMEM, computes
+the inner-product tile on the MXU, and fuses the norm expansion
+``||a-b||^2 = |a|^2 + |b|^2 - 2ab`` so the distance tile is produced in one
+pass without materializing intermediate products in HBM.
+
+Also here: the int8 variant (paper Sec. 6 future work — "quantized GEMM
+operations on scalar-quantized points").  int8 x int8 -> int32 runs on the
+MXU at 2x bf16 throughput on v5e; BigANN (uint8) and MS-SPACEV (int8) are
+natively quantized datasets.
+
+Tiling notes (v5e): MXU is 128x128; bm = bn = 128 default, full-d K panels
+(d <= 2048 after padding => a 128x2048 f32 tile is 1 MB; two tiles + the
+f32 accumulator tile (64 KB) sit comfortably in ~128 MB VMEM even with
+double buffering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_kernel(a_ref, b_ref, o_ref, *, metric: str):
+    a = a_ref[0].astype(jnp.float32)           # [bm, d]
+    b = b_ref[0].astype(jnp.float32)           # [bn, d]
+    ip = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # [bm, bn] on the MXU
+    if metric == "mips":
+        o_ref[0] = -ip
+        return
+    if metric == "cosine":
+        an = jnp.sqrt(jnp.sum(a * a, axis=-1))[:, None]
+        bn_ = jnp.sqrt(jnp.sum(b * b, axis=-1))[None, :]
+        o_ref[0] = 1.0 - ip / jnp.maximum(an * bn_, 1e-30)
+        return
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    o_ref[0] = jnp.maximum(a2 + b2 - 2.0 * ip, 0.0)
+
+
+def _dist_kernel_int8(a_ref, b_ref, o_ref):
+    a = a_ref[0].astype(jnp.int32)
+    b = b_ref[0].astype(jnp.int32)
+    # int8 dot with int32 accumulation on the MXU
+    ip = jax.lax.dot_general(
+        a_ref[0], b_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    o_ref[0] = a2 + b2 - 2 * ip
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "bm", "bn", "interpret")
+)
+def pairwise_distance(
+    a: jax.Array,   # [B, M, D]
+    b: jax.Array,   # [B, N, D]
+    *,
+    metric: str = "l2",
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched pairwise dissimilarity via the Pallas kernel. [B, M, N] f32."""
+    bsz, m, d = a.shape
+    n = b.shape[1]
+    a = _pad_to(_pad_to(a, 1, bm), 2, 128)
+    b = _pad_to(_pad_to(b, 1, bn), 2, 128)
+    mp, np_ = a.shape[1], b.shape[1]
+    dp = a.shape[2]
+    grid = (bsz, mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_dist_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((bsz, mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, dp), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((1, bn, dp), lambda bb, i, j: (bb, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j)),
+        interpret=interpret,
+    )(a, b)
+    return out[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pairwise_distance_int8(
+    a: jax.Array,   # [B, M, D] int8
+    b: jax.Array,   # [B, N, D] int8
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized squared-L2 on int8 inputs -> int32 distances."""
+    if a.dtype != jnp.int8 or b.dtype != jnp.int8:
+        raise TypeError("pairwise_distance_int8 expects int8 inputs")
+    bsz, m, d = a.shape
+    n = b.shape[1]
+    a = _pad_to(_pad_to(a, 1, bm, 0), 2, 128, 0)
+    b = _pad_to(_pad_to(b, 1, bn, 0), 2, 128, 0)
+    mp, np_, dp = a.shape[1], b.shape[1], a.shape[2]
+    grid = (bsz, mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _dist_kernel_int8,
+        out_shape=jax.ShapeDtypeStruct((bsz, mp, np_), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, dp), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((1, bn, dp), lambda bb, i, j: (bb, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j)),
+        interpret=interpret,
+    )(a, b)
+    return out[:, :m, :n]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused residual-hash bit packing for candidate edges.
+
+Given pre-gathered sketch rows for each candidate edge (src = owning point
+p, dst = candidate c), computes the paper's Eq. 1 hash
+
+    h_p(c) = pack_bits( sign(Sketch(c) - Sketch(p)) )
+
+in one VPU pass: subtract, threshold, weighted-sum with powers of two.
+Edges are viewed as [rows, 128] so tiles are lane-aligned; m <= 16 bits pack
+into an int32 (stored alongside the 8-byte reservoir slot layout the paper
+describes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _edge_hash_kernel(src_ref, dst_ref, o_ref, *, m: int):
+    s = src_ref[0]                              # [LANE, m]
+    t = dst_ref[0]                              # [LANE, m]
+    bits = ((t - s) >= 0.0).astype(jnp.int32)   # [LANE, m]
+    weights = (2 ** jax.lax.broadcasted_iota(jnp.int32, (LANE, m), 1))
+    o_ref[0] = jnp.sum(bits * weights, axis=1)  # [LANE]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def edge_hashes(
+    src_sketch: jax.Array,   # [E, m] sketches of edge sources (owning points)
+    dst_sketch: jax.Array,   # [E, m] sketches of edge destinations
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed residual hashes [E] int32."""
+    e, m = src_sketch.shape
+    pad = (-e) % LANE
+    if pad:
+        src_sketch = jnp.pad(src_sketch, ((0, pad), (0, 0)))
+        dst_sketch = jnp.pad(dst_sketch, ((0, pad), (0, 0)))
+    rows = src_sketch.shape[0] // LANE
+    s3 = src_sketch.reshape(rows, LANE, m)
+    t3 = dst_sketch.reshape(rows, LANE, m)
+    out = pl.pallas_call(
+        functools.partial(_edge_hash_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, LANE, m), lambda r: (r, 0, 0)),
+            pl.BlockSpec((1, LANE, m), lambda r: (r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE), lambda r: (r, 0)),
+        interpret=interpret,
+    )(s3, t3)
+    return out.reshape(-1)[:e]

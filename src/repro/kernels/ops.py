@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) kernels run in ``interpret=True`` mode — the kernel
+body executes in Python/XLA-CPU for correctness validation; on TPU the same
+calls lower to Mosaic.  ``default_interpret()`` picks automatically.
+
+``make_knn_fn`` adapts FlashKNN to the ``build_leaf_edges`` hook so the
+whole PiPNN build can run on the fused kernel end-to-end
+(``PiPNNParams`` users pass ``knn_fn=ops.make_knn_fn(k, metric)``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance import pairwise_distance, pairwise_distance_int8
+from repro.kernels.edge_hash import edge_hashes
+from repro.kernels.leaf_knn import leaf_topk
+from repro.kernels.topk import rowwise_topk
+
+__all__ = [
+    "pairwise_distance",
+    "pairwise_distance_int8",
+    "edge_hashes",
+    "leaf_topk",
+    "rowwise_topk",
+    "default_interpret",
+    "make_knn_fn",
+]
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """True when no TPU is present (kernels validate in interpret mode)."""
+    return jax.default_backend() != "tpu"
+
+
+def make_knn_fn(k: int, metric: str = "l2", interpret: bool | None = None):
+    """FlashKNN as a drop-in for leaf.build_leaf_edges(knn_fn=...)."""
+    interp = default_interpret() if interpret is None else interpret
+
+    def knn(pts: jax.Array, valid: jax.Array):
+        return leaf_topk(pts, valid, k=k, metric=metric, interpret=interp)
+
+    return knn

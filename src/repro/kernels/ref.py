@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; kernels must match them (tests sweep shapes and
+dtypes with assert_allclose against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_distance_ref(
+    a: jax.Array, b: jax.Array, metric: str = "l2"
+) -> jax.Array:
+    """Batched pairwise dissimilarity. a: [B, M, D], b: [B, N, D] -> [B, M, N].
+
+    Accumulation in f32 regardless of input dtype (bf16/f32 inputs).
+    """
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    ip = jnp.einsum("bmd,bnd->bmn", a32, b32)
+    if metric == "mips":
+        return -ip
+    if metric == "cosine":
+        an = jnp.linalg.norm(a32, axis=-1)[:, :, None]
+        bn = jnp.linalg.norm(b32, axis=-1)[:, None, :]
+        return 1.0 - ip / jnp.maximum(an * bn, 1e-30)
+    a2 = jnp.sum(a32 * a32, axis=-1)[:, :, None]
+    b2 = jnp.sum(b32 * b32, axis=-1)[:, None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * ip, 0.0)
+
+
+def pairwise_distance_int8_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Quantized squared-L2 (paper Sec. 6 future work). int8 in, int32 out.
+
+    ||a-b||^2 = a.a + b.b - 2 a.b, exact in int32 for d <= 2^15.
+    """
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    ip = jnp.einsum("bmd,bnd->bmn", a32, b32)
+    a2 = jnp.sum(a32 * a32, axis=-1)[:, :, None]
+    b2 = jnp.sum(b32 * b32, axis=-1)[:, None, :]
+    return a2 + b2 - 2 * ip
+
+
+def leaf_topk_ref(
+    pts: jax.Array,    # [B, C, D]
+    valid: jax.Array,  # [B, C] bool
+    *,
+    k: int,
+    metric: str = "l2",
+) -> tuple[jax.Array, jax.Array]:
+    """FlashKNN oracle: per-row k nearest co-leaf points (self/pad excluded).
+
+    Returns (idx [B, C, k] in-leaf positions, -1 pad; dist [B, C, k], +inf pad).
+    Ties broken toward the smaller in-leaf index (matches kernel).
+    """
+    d = pairwise_distance_ref(pts, pts, metric)
+    c = pts.shape[1]
+    eye = jnp.eye(c, dtype=bool)
+    mask = valid[:, None, :] & valid[:, :, None] & ~eye[None]
+    d = jnp.where(mask, d, jnp.inf)
+    # stable top-k with index tie-breaking: sort (dist, idx)
+    iota = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), d.shape)
+    sd, si = jax.lax.sort((d, iota), dimension=-1, num_keys=2)
+    sd, si = sd[..., :k], si[..., :k]
+    ok = jnp.isfinite(sd)
+    return jnp.where(ok, si, -1), jnp.where(ok, sd, jnp.inf)
+
+
+def rowwise_topk_ref(
+    d: jax.Array,      # [B, M, N] dissimilarities (+inf = masked)
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Vectorized partial-sort oracle (the paper's VQPartialSort analogue).
+
+    Returns (idx [B, M, k], vals [B, M, k]); ties toward smaller index.
+    """
+    iota = jnp.broadcast_to(
+        jnp.arange(d.shape[-1], dtype=jnp.int32), d.shape
+    )
+    sd, si = jax.lax.sort((d, iota), dimension=-1, num_keys=2)
+    sd, si = sd[..., :k], si[..., :k]
+    ok = jnp.isfinite(sd)
+    return jnp.where(ok, si, -1), jnp.where(ok, sd, jnp.inf)
+
+
+def sketch_hash_ref(
+    x: jax.Array,           # [N, D] points
+    hyperplanes: jax.Array,  # [M_BITS, D]
+) -> jax.Array:
+    """Fused sketch+nothing oracle: sketches [N, M_BITS] f32.
+
+    (Bit packing happens per-edge; the kernel fuses the GEMM + padding.)
+    """
+    return (x.astype(jnp.float32) @ hyperplanes.astype(jnp.float32).T)

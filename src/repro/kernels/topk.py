@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: batched row-wise top-k partial selection.
+
+The TPU analogue of the paper's Highway VQPartialSort optimization
+(Supplement A.4): given a (possibly masked, +inf) dissimilarity matrix,
+select each row's k smallest entries with indices, reading each tile of the
+matrix exactly once.  Used standalone (e.g. point->leader fanout selection
+in the distributed RBC build) where the distance matrix already exists;
+where it doesn't, prefer the fused FlashKNN kernel (leaf_knn.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.leaf_knn import _merge_topk
+
+
+def _topk_kernel(d_ref, ov_ref, oi_ref, *, k: int, bm: int, bn: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        ov_ref[0] = jnp.full((bm, k), jnp.inf, dtype=jnp.float32)
+        oi_ref[0] = jnp.full((bm, k), -1, dtype=jnp.int32)
+
+    d = d_ref[0].astype(jnp.float32)                        # [bm, bn]
+    col_pos = j * bn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    comb_v = jnp.concatenate([ov_ref[0], d], axis=1)
+    comb_i = jnp.concatenate([oi_ref[0], col_pos], axis=1)
+    nv, ni = _merge_topk(comb_v, comb_i, k)
+    ov_ref[0] = nv
+    oi_ref[0] = ni
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "interpret"))
+def rowwise_topk(
+    d: jax.Array,   # [B, M, N] dissimilarities, +inf = masked
+    *,
+    k: int,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise k smallest (with original column indices). [B, M, k]."""
+    bsz, m, n = d.shape
+    padm = (-m) % bm
+    padn = (-n) % bn
+    if padm or padn:
+        d = jnp.pad(d, ((0, 0), (0, padm), (0, padn)), constant_values=jnp.inf)
+    mp, np_ = d.shape[1], d.shape[2]
+    grid = (bsz, mp // bm, np_ // bn)
+    ov, oi = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, bm=bm, bn=bn),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, mp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, mp, k), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j))],
+        out_specs=(
+            pl.BlockSpec((1, bm, k), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((1, bm, k), lambda bb, i, j: (bb, i, 0)),
+        ),
+        interpret=interpret,
+    )(d)
+    return oi[:, :m], ov[:, :m]

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-touching import: jax locks the device count at
+# first init, and the production meshes below need 512 placeholder devices.
+# Only the dry-run sets this — tests/benches see the real (1) device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell      # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config           # noqa: E402
+from repro.launch import steps                                    # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.roofline import analysis as roofline                   # noqa: E402
+
+MESHES = {
+    "single": dict(multi_pod=False, n_devices=256),
+    "multi": dict(multi_pod=True, n_devices=512),
+}
+
+
+# ---------------------------------------------------------------------------
+# Useful-FLOPs accounting (MODEL_FLOPS = 6*N*D / 2*N*D, N_active for MoE)
+# ---------------------------------------------------------------------------
+
+def count_params(arch: ArchConfig) -> tuple[float, float]:
+    """(total params, active params) from the abstract param tree.
+
+    MoE expert stacks (4-D ``moe``-scoped leaves) count top_k/E of their
+    size toward the active total; everything else counts fully.  Tied
+    embeddings count once — the unembed matmul's FLOPs are then exactly
+    6*d*V per train token, which the 6*N*D formula already includes.
+    """
+    model = steps.build_model(arch)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    moe = getattr(arch.model, "moe", None)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    total = active = 0.0
+    for path, leaf in flat:
+        name = "_".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        size = float(np.prod(leaf.shape))
+        total += size
+        if moe is not None and "moe" in name and leaf.ndim == 4:
+            active += size * moe.top_k / moe.n_experts
+        else:
+            active += size
+    return total, active
+
+
+def useful_flops(arch: ArchConfig, cell: ShapeCell) -> float:
+    _, active = count_params(arch)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+    else:                                   # decode: one token per sequence
+        tokens = cell.global_batch
+    return roofline.model_flops(active, tokens, cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: ArchConfig, cell: ShapeCell, mesh_name: str,
+             out_dir: str, *, force: bool = False) -> dict:
+    tag = f"{arch.arch_id}__{cell.name}__{mesh_name}"
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    info = MESHES[mesh_name]
+    mesh = make_production_mesh(multi_pod=info["multi_pod"])
+    t0 = time.perf_counter()
+    record: dict = {"cell": f"{arch.arch_id}:{cell.name}", "mesh": mesh_name,
+                    "n_devices": info["n_devices"], "kind": cell.kind}
+    try:
+        with mesh:
+            prog = steps.cell_program(arch, cell, mesh)
+            lowered = prog.lower()
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            print(f"[{tag}] memory_analysis: {ma}")
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            print(f"[{tag}] cost_analysis: flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e}")
+
+            roof = roofline.analyze_compiled(
+                compiled, name=record["cell"], mesh_name=mesh_name,
+                n_devices=info["n_devices"], kind=cell.kind,
+                useful_flops=useful_flops(arch, cell),
+            )
+            record.update(roof.to_json())
+            record["lower_s"] = round(t_lower, 2)
+            record["compile_s"] = round(t_compile, 2)
+            record["ok"] = True
+            del compiled, lowered, prog
+    except Exception as e:
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{tag}] FAILED: {record['error']}", file=sys.stderr)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "ok" if record.get("ok") else "FAIL"
+    print(f"[{tag}] {status} "
+          f"(lower {record.get('lower_s', '-')}s, "
+          f"compile {record.get('compile_s', '-')}s, "
+          f"dominant {record.get('dominant', '-')})")
+    return record
+
+
+# ---------------------------------------------------------------------------
+# The PiPNN distributed index-build workload (the paper's own technique)
+# ---------------------------------------------------------------------------
+
+def run_index_build(mesh_name: str, out_dir: str, *, n_points: int,
+                    dim: int, force: bool = False,
+                    variant: str = "baseline") -> dict:
+    from repro.launch import build_index
+
+    tag = f"pipnn-index-build-{variant}__n{n_points}_d{dim}__{mesh_name}"
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    info = MESHES[mesh_name]
+    mesh = make_production_mesh(multi_pod=info["multi_pod"])
+    record: dict = {"cell": tag, "mesh": mesh_name,
+                    "n_devices": info["n_devices"], "kind": "index_build"}
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            lowered = build_index.lower_build_step(
+                mesh, n_points=n_points, dim=dim, variant=variant)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            print(f"[{tag}] memory_analysis: {compiled.memory_analysis()}")
+            roof = roofline.analyze_compiled(
+                compiled, name=tag, mesh_name=mesh_name,
+                n_devices=info["n_devices"], kind="index_build",
+                useful_flops=build_index.useful_flops(n_points, dim),
+            )
+            record.update(roof.to_json())
+            record["lower_s"] = round(t_lower, 2)
+            record["compile_s"] = round(t_compile, 2)
+            record["ok"] = True
+    except Exception as e:
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{tag}] FAILED: {record['error']}", file=sys.stderr)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[{tag}] {'ok' if record.get('ok') else 'FAIL'}")
+    return record
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="AOT multi-pod dry-run: lower+compile every "
+                    "(arch x shape x mesh) cell; no data is allocated.")
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--workload", choices=["lm", "index_build"],
+                    default="lm")
+    ap.add_argument("--index-points", type=int, default=1 << 30)
+    ap.add_argument("--index-dim", type=int, default=128)
+    ap.add_argument("--index-variant", default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.workload == "index_build":
+        ok = True
+        for m in meshes:
+            rec = run_index_build(m, args.out, n_points=args.index_points,
+                                  dim=args.index_dim, force=args.force,
+                                  variant=args.index_variant)
+            ok &= rec.get("ok", False)
+        return 0 if ok else 1
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    n_fail = 0
+    for arch_id in archs:
+        arch = get_config(arch_id)
+        cells = arch.runnable_cells()
+        if args.shape != "all":
+            cells = [c for c in cells if c.name == args.shape]
+            if not cells:
+                skip = dict(arch.skipped_cells())
+                if args.shape in skip:
+                    print(f"[{arch_id}:{args.shape}] SKIPPED: "
+                          f"{skip[args.shape]}")
+                    continue
+        for cell in cells:
+            for m in meshes:
+                rec = run_cell(arch, cell, m, args.out, force=args.force)
+                n_fail += 0 if rec.get("ok") else 1
+        for name, why in arch.skipped_cells():
+            print(f"[{arch_id}:{name}] SKIPPED: {why}")
+    print(f"dry-run done, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

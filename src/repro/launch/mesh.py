@@ -1,0 +1,45 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run target meshes:
+
+  * single-pod: 16 x 16  = 256 chips, axes ("data", "model")
+  * multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model")
+
+On hardware with more devices than the mesh needs (e.g. the dry-run's 512
+virtual CPU devices hosting a 256-chip mesh) the first ``prod(shape)``
+devices are used.  ``make_local_mesh`` builds whatever mesh the actually
+available devices support — used by train.py / serve.py / tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > need:
+        return jax.make_mesh(shape, axes, devices=devices[:need])
+    raise RuntimeError(
+        f"production mesh {shape} needs {need} devices, have {len(devices)} "
+        "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+        "=512 before importing jax)"
+    )
+
+
+def make_local_mesh(model_parallel: int = 1) -> Mesh:
+    """A ("data", "model") mesh over whatever devices exist right now."""
+    devices = jax.devices()
+    n = len(devices)
+    if n % model_parallel != 0:
+        raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"), devices=devices)

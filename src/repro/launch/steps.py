@@ -1,0 +1,274 @@
+"""Step builders shared by dryrun.py, train.py and serve.py.
+
+One place defines, per (architecture x shape-cell):
+
+  * the jit-able step function      (train_step / prefill_step / serve_step)
+  * its abstract inputs             (ShapeDtypeStruct pytrees, no allocation)
+  * its in/out shardings on a mesh  (from repro.distributed.sharding rules)
+
+so the dry-run compiles EXACTLY what the real launchers run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models import model_zoo
+from repro.optim import adamw
+
+
+def build_model(arch: ArchConfig, *, smoke: bool = False,
+                act_sharding=None, attn_impl: str | None = None,
+                moe_impl: str | None = None) -> model_zoo.Model:
+    cfg = arch.smoke_model if smoke else arch.model
+    if act_sharding is not None and hasattr(cfg, "act_sharding"):
+        cfg = dataclasses.replace(cfg, act_sharding=act_sharding)
+    if attn_impl is not None and hasattr(cfg, "attn_impl"):
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if moe_impl is not None and hasattr(cfg, "moe_impl"):
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    return model_zoo.build(cfg, arch.family)
+
+
+def act_sharding_for(mesh: Mesh, policy: str, batch: int,
+                     seq: int) -> NamedSharding:
+    """[B, T, D] activation pin for the policy.
+
+    Batch over every axis the policy allows; when the batch cannot cover
+    the model axis (e.g. 32-sequence 32k prefill), fall back to batch
+    over (pod, data) + SEQUENCE over model — sequence parallelism keeps
+    all chips busy without replicating compute.
+    """
+    axes = shd.all_axes(mesh) if policy in ("fsdp", "ep_dp") \
+        else shd.data_axes(mesh)
+    if shd._dim_ok(batch, mesh, axes):
+        return NamedSharding(mesh, P(axes, None, None))
+    da = shd.data_axes(mesh)
+    b_ax = da if shd._dim_ok(batch, mesh, da) else None
+    s_ax = "model" if (policy in ("fsdp", "ep_dp")
+                       and "model" in mesh.axis_names
+                       and seq % mesh.shape["model"] == 0) else None
+    return NamedSharding(mesh, P(b_ax, s_ax, None))
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def make_train_step(model: model_zoo.Model, opt_cfg: adamw.AdamWConfig,
+                    n_micro: int = 1, mesh: Mesh | None = None,
+                    policy: str = "fsdp_tp") -> Callable:
+    constraint = microbatch_constraint(mesh, policy) \
+        if mesh is not None else None
+
+    def train_step(state: TrainState, batch):
+        loss, grads = adamw.accumulate_grads(
+            model.loss_fn, state.params, batch, n_micro,
+            constraint_fn=constraint)
+        params, opt, metrics = adamw.update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def microbatch_constraint(mesh: Mesh, policy: str = "fsdp_tp"):
+    """Re-pin data-axis sharding after the microbatch reshape (see
+    adamw.accumulate_grads): leaves are [n_micro, B/m, ...] (or
+    [n_micro, 3, B/m, T] for VLM positions)."""
+    da = shd.all_axes(mesh) if policy in ("fsdp", "ep_dp") \
+        else shd.data_axes(mesh)
+    da2 = shd.data_axes(mesh)
+
+    def constrain(key, x):
+        bdim = 2 if key == "positions" else 1
+        axes = da if shd._dim_ok(x.shape[bdim], mesh, da) else \
+            (da2 if shd._dim_ok(x.shape[bdim], mesh, da2) else None)
+        spec = P(*(None,) * bdim, axes, *(None,) * (x.ndim - bdim - 1))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def abstract_train_state(model: model_zoo.Model,
+                         opt_cfg: adamw.AdamWConfig) -> TrainState:
+    """ShapeDtypeStruct pytree of the full train state — no allocation."""
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), params)
+    return TrainState(params=params, opt=opt)
+
+
+def train_state_shardings(state: TrainState, mesh: Mesh,
+                          family: str, policy: str = "fsdp_tp") -> TrainState:
+    pshard = shd.params_shardings(state.params, mesh, family, policy)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=pshard,
+        opt=adamw.AdamWState(step=rep, m=pshard, v=pshard),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: model_zoo.Model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(model: model_zoo.Model) -> Callable:
+    """One decode step: next-token logits given a KV/SSM cache."""
+
+    def serve_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: everything the dry-run needs for one (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellProgram:
+    """A jit-ready (fn, abstract args, shardings) triple for one cell."""
+    name: str
+    kind: str                    # train | prefill | decode
+    fn: Callable
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _batch_sharding_tree(batch_spec: dict, mesh: Mesh,
+                         policy: str = "fsdp_tp"):
+    return shd.batch_shardings(batch_spec, mesh, policy)
+
+
+def _logits_sharding(mesh: Mesh, batch: int, vocab: int) -> NamedSharding:
+    """[B, V] logits: batch over data, vocab over model (when divisible).
+
+    The unembedding table is vocab-sharded over `model`, so logits land
+    model-sharded on V naturally; keeping them that way avoids an
+    all-gather of a [B, 152k] f32 tensor at the step boundary.
+    """
+    da = shd.data_axes(mesh)
+    b_ax = da if shd._dim_ok(batch, mesh, da) else None
+    v_ax = "model" if shd._dim_ok(vocab, mesh, "model") else None
+    return NamedSharding(mesh, P(b_ax, v_ax))
+
+
+def cell_program(arch: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                 *, smoke: bool = False,
+                 opt_cfg: adamw.AdamWConfig | None = None) -> CellProgram:
+    """Build the compile unit for one (arch x shape) on ``mesh``."""
+    family = arch.family
+    policy = arch.parallelism
+    # decode wants weights RESIDENT (TP), not ZeRO-3-gathered per token:
+    # a 1-token step under fsdp re-gathers every layer's weights for
+    # almost no compute (measured 2-3x worse decode bounds), so decode
+    # cells of fsdp archs fall back to the fsdp_tp layout.
+    if cell.kind == "decode" and policy == "fsdp":
+        policy = "fsdp_tp"
+    # fsdp policies shard the sequence, not the heads: use the
+    # sequence-parallel flash variant (no q-scan to break the sharding)
+    attn_impl = "flash_sp" if policy in ("fsdp", "ep_dp") else None
+    model = build_model(
+        arch, smoke=smoke, attn_impl=attn_impl,
+        moe_impl="ep_a2a" if policy == "ep_dp" else None,
+        act_sharding=act_sharding_for(
+            mesh, policy, cell.global_batch, cell.seq_len))
+    rep = NamedSharding(mesh, P())
+    scalars_rep = functools.partial(jax.tree.map, lambda _: rep)
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig(
+            moment_dtype=getattr(arch.model, "param_dtype", jnp.float32))
+        n_micro = arch.microbatch(cell.name)
+        fn = make_train_step(model, opt_cfg, n_micro, mesh=mesh,
+                             policy=policy)
+        state = abstract_train_state(model, opt_cfg)
+        st_shard = train_state_shardings(state, mesh, family, policy)
+        batch = model.train_batch_spec(cell.global_batch, cell.seq_len)
+        b_shard = _batch_sharding_tree(batch, mesh, policy)
+        out_shardings = (st_shard, {"grad_norm": rep, "lr": rep, "loss": rep})
+        return CellProgram(
+            name=f"{arch.arch_id}:{cell.name}", kind="train", fn=fn,
+            args=(state, batch), in_shardings=(st_shard, b_shard),
+            out_shardings=out_shardings, donate_argnums=(0,),
+        )
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.params_shardings(params, mesh, family, policy)
+
+    if cell.kind == "prefill":
+        fn = make_prefill_step(model, cell.seq_len)
+        batch = model.prefill_batch_spec(cell.global_batch, cell.seq_len)
+        b_shard = _batch_sharding_tree(batch, mesh, policy)
+        cache = model.init_cache_spec(cell.global_batch, cell.seq_len)
+        c_shard = shd.cache_shardings(cache, mesh, policy)
+        vocab = getattr(arch.model, "vocab", 0)
+        logits_shard = _logits_sharding(mesh, cell.global_batch, vocab)
+        return CellProgram(
+            name=f"{arch.arch_id}:{cell.name}", kind="prefill", fn=fn,
+            args=(params, batch), in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+        )
+
+    if cell.kind == "decode":
+        fn = make_serve_step(model)
+        token = model.decode_spec(cell.global_batch)
+        t_shard = NamedSharding(
+            mesh, shd.batch_spec("tokens", token, mesh, policy))
+        cache = model.init_cache_spec(cell.global_batch, cell.seq_len)
+        c_shard = shd.cache_shardings(cache, mesh, policy)
+        vocab = getattr(arch.model, "vocab", 0)
+        logits_shard = _logits_sharding(mesh, cell.global_batch, vocab)
+        return CellProgram(
+            name=f"{arch.arch_id}:{cell.name}", kind="decode", fn=fn,
+            args=(params, token, cache),
+            in_shardings=(p_shard, t_shard, c_shard),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(2,),
+        )
+
+    raise ValueError(f"unknown cell kind {cell.kind!r}")
+
+
+def input_specs(arch: ArchConfig, cell: ShapeCell, *,
+                smoke: bool = False) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step."""
+    return cell_program(
+        arch, cell,
+        mesh=jax.make_mesh((1, 1), ("data", "model"),
+                           devices=jax.devices()[:1]),
+        smoke=smoke,
+    ).args

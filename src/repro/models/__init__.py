@@ -1,0 +1,3 @@
+"""Architecture zoo: dense GQA transformers, MoE, encoder-decoder, SSM
+(Mamba2/SSD), and hybrid backbones, all scan-over-layers and pure JAX."""
+from repro.models.model_zoo import Model, build

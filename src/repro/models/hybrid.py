@@ -1,0 +1,225 @@
+"""Hybrid SSM + shared-attention LM (zamba2-2.7b).
+
+Zamba2's signature structure: a deep Mamba2 backbone with ONE shared
+transformer block (full MHA + MLP) applied at a fixed period.  We apply the
+shared block every ``attn_every`` Mamba2 layers (DESIGN.md records the
+simplifications vs. the released checkpoints: no per-application LoRA
+deltas, no embedding concatenation — the shared block is reused verbatim).
+
+Decode state = per-layer Mamba2 states + one KV cache per shared-block
+application (n_apps = n_layers / attn_every), giving near-SSM decode cost
+with a few attention reads — the hybrid trade the long_500k cell probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AttnConfig, Params
+from repro.models.mamba2 import (
+    Mamba2Config,
+    Mamba2State,
+    mamba2_decode_step,
+    mamba2_forward,
+    mamba2_init,
+    mamba2_prefill_state,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int              # mamba2 layers
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    attn_every: int = 18       # shared block applied every N mamba layers
+    d_state: int = 64
+    ssm_head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    q_chunk: int = 512
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    z_loss: float = 1e-4
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_apps(self) -> int:
+        assert self.n_layers % self.attn_every == 0
+        return self.n_layers // self.attn_every
+
+    def attn_config(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            rope_theta=self.rope_theta, q_chunk=self.q_chunk,
+            norm_eps=self.norm_eps,
+        )
+
+    def mamba_config(self) -> Mamba2Config:
+        return Mamba2Config(
+            d_model=self.d_model, d_state=self.d_state,
+            head_dim=self.ssm_head_dim, expand=self.expand, chunk=self.chunk,
+            norm_eps=self.norm_eps,
+        )
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array     # [L, B, W-1, conv_dim]
+    ssm: jax.Array      # [L, B, H, P, N]
+    k: jax.Array        # [n_apps, B, S, KV, hd]
+    v: jax.Array
+    index: jax.Array
+
+
+def init(key, cfg: HybridConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    mcfg = cfg.mamba_config()
+    block_keys = jax.random.split(k2, cfg.n_layers)
+
+    def blk(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mamba": mamba2_init(k, mcfg, cfg.param_dtype),
+        }
+
+    ks = jax.random.split(k3, 2)
+    shared = {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": L.attn_init(ks[0], cfg.attn_config(), cfg.param_dtype),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype=cfg.param_dtype),
+    }
+    return {
+        "embed": L.embedding_init(k1, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "blocks": jax.vmap(blk)(block_keys),
+        "shared": shared,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _segments(params: Params, cfg: HybridConfig):
+    """Reshape stacked mamba blocks [L, ...] -> [n_apps, per_seg, ...]."""
+    per = cfg.attn_every
+    return jax.tree.map(
+        lambda a: a.reshape((cfg.n_apps, per) + a.shape[1:]), params["blocks"]
+    )
+
+
+def forward(params: Params, cfg: HybridConfig, tokens: jax.Array):
+    x = L.embed(params["embed"], tokens)
+    b, t = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    mcfg = cfg.mamba_config()
+    acfg = cfg.attn_config()
+    segs = _segments(params, cfg)
+
+    def mamba_body(x, blk):
+        x = x + mamba2_forward(blk["mamba"], mcfg,
+                               L.rmsnorm(blk["ln"], x, cfg.norm_eps))
+        return x, None
+
+    mamba_body = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+
+    def seg_body(x, seg_blocks):
+        x, _ = jax.lax.scan(mamba_body, x, seg_blocks)
+        sh = params["shared"]
+        x = x + L.attention(sh["attn"], acfg,
+                            L.rmsnorm(sh["ln1"], x, cfg.norm_eps), pos)
+        x = x + L.mlp(sh["mlp"], L.rmsnorm(sh["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(seg_body, x, segs)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def loss_fn(params: Params, cfg: HybridConfig, batch: dict) -> jax.Array:
+    h = forward(params, cfg, batch["tokens"])
+    logits = L.unembed(params["embed"], h)
+    return L.cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+
+
+def prefill(params: Params, cfg: HybridConfig, tokens: jax.Array,
+            max_len: int, cache_dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens)
+    b, t = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    mcfg = cfg.mamba_config()
+    acfg = cfg.attn_config()
+    segs = _segments(params, cfg)
+
+    def mamba_body(x, blk):
+        h = L.rmsnorm(blk["ln"], x, cfg.norm_eps)
+        y = mamba2_forward(blk["mamba"], mcfg, h)
+        st = mamba2_prefill_state(blk["mamba"], mcfg, h)
+        return x + y, st
+
+    def seg_body(x, seg_blocks):
+        x, states = jax.lax.scan(mamba_body, x, seg_blocks)
+        sh = params["shared"]
+        h = L.rmsnorm(sh["ln1"], x, cfg.norm_eps)
+        y, (kc, vc) = L.attention_prefill(sh["attn"], acfg, h, pos, max_len)
+        x = x + y
+        x = x + L.mlp(sh["mlp"], L.rmsnorm(sh["ln2"], x, cfg.norm_eps))
+        return x, (states, kc.astype(cache_dtype), vc.astype(cache_dtype))
+
+    x, (states, ks, vs) = jax.lax.scan(seg_body, x, segs)
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h[:, -1:])[:, 0]
+    conv = states.conv.reshape((cfg.n_layers,) + states.conv.shape[2:])
+    ssm = states.ssm.reshape((cfg.n_layers,) + states.ssm.shape[2:])
+    return logits, HybridCache(conv=conv, ssm=ssm, k=ks, v=vs,
+                               index=jnp.int32(t))
+
+
+def decode_step(params: Params, cfg: HybridConfig, token: jax.Array,
+                cache: HybridCache):
+    x = L.embed(params["embed"], token)
+    mcfg = cfg.mamba_config()
+    acfg = cfg.attn_config()
+    segs = _segments(params, cfg)
+    per = cfg.attn_every
+    conv = cache.conv.reshape((cfg.n_apps, per) + cache.conv.shape[1:])
+    ssm = cache.ssm.reshape((cfg.n_apps, per) + cache.ssm.shape[1:])
+
+    def mamba_body(x, blk_state):
+        blk, cv, sm = blk_state
+        h = L.rmsnorm(blk["ln"], x, cfg.norm_eps)
+        y, st = mamba2_decode_step(blk["mamba"], mcfg, h,
+                                   Mamba2State(conv=cv, ssm=sm))
+        return x + y, (st.conv, st.ssm)
+
+    def seg_body(x, seg):
+        seg_blocks, cv, sm, kc, vc = seg
+        x, (ncv, nsm) = jax.lax.scan(mamba_body, x, (seg_blocks, cv, sm))
+        sh = params["shared"]
+        h = L.rmsnorm(sh["ln1"], x, cfg.norm_eps)
+        y, (kc, vc) = L.attention_decode(sh["attn"], acfg, h, cache.index,
+                                         (kc, vc), cache.index)
+        x = x + y
+        x = x + L.mlp(sh["mlp"], L.rmsnorm(sh["ln2"], x, cfg.norm_eps))
+        return x, (ncv, nsm, kc, vc)
+
+    x, (ncv, nsm, ks, vs) = jax.lax.scan(
+        seg_body, x, (segs, conv, ssm, cache.k, cache.v)
+    )
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)[:, 0]
+    return logits, HybridCache(
+        conv=ncv.reshape((cfg.n_layers,) + ncv.shape[2:]),
+        ssm=nsm.reshape((cfg.n_layers,) + nsm.shape[2:]),
+        k=ks, v=vs, index=cache.index + 1,
+    )

@@ -1,0 +1,466 @@
+"""Shared layers for the architecture zoo.
+
+Pure-JAX functional style: params are nested dicts of arrays; every model
+stacks its block params along a leading layer axis and lax.scans over them
+(essential for AOT-compiling 126-layer models in the dry-run).
+
+Attention covers the whole assigned matrix: GQA with any kv<=q head count,
+optional QKV bias (qwen2), optional qk-norm (qwen3), RoPE and M-RoPE
+(qwen2-vl), causal + prefix masks, KV-cache decode, and chunked prefill
+(online-softmax over query chunks) so 32k-context prefill never
+materializes a [T, T] logits buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# ------------------------------------------------------------------ norms ---
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ----------------------------------------------------------------- linear ---
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> Params:
+    s = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- RoPE ---
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, hd]; positions: [B, T] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: [3, B, T] (t/h/w components).
+
+    The hd/2 frequency slots are split into three contiguous sections, each
+    rotated by its own position component (text tokens carry equal
+    components, reducing to standard RoPE).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [3, B, T, hd/2]
+    s_t, s_h, s_w = sections
+    assert s_t + s_h + s_w == hd // 2, "M-RoPE sections must cover hd/2"
+    sel = jnp.concatenate([
+        jnp.zeros((s_t,), jnp.int32),
+        jnp.ones((s_h,), jnp.int32),
+        jnp.full((s_w,), 2, jnp.int32),
+    ])                                                   # [hd/2]
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),                        # [B, T, hd/2, 3]
+        sel[None, None, :, None], axis=-1,
+    )[..., 0]                                            # [B, T, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention ---
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] | None = None
+    causal: bool = True
+    q_chunk: int = 1024        # prefill query-chunk size (memory bound)
+    k_chunk: int = 1024        # flash path: key-chunk size
+    attn_impl: str = "flash"   # "flash" (online softmax, [qc,kc] tiles) |
+    #                            "chunked" (materializes [qc, S] scores)
+    norm_eps: float = 1e-6
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttnConfig, x: jax.Array,
+                 positions: jax.Array):
+    b, t, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, q_chunk: int,
+                  q_offset: jax.Array | int = 0):
+    """Grouped-query attention, online over query chunks.
+
+    q: [B, T, H, hd]; k/v: [B, S, KV, hd].  Each query chunk materializes
+    only a [B, H, qc, S] logits tile, so prefill memory is O(T/qc) smaller
+    than naive attention.  H % KV == 0 (GQA groups).
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    qc = min(q_chunk, t)
+    pad = (-t) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = q.shape[1] // qc
+    qr = q.reshape(b, nchunks, qc, kv, g, hd)
+    k_ = k.astype(jnp.float32)
+    v_ = v.astype(jnp.float32)
+
+    def chunk(carry, inputs):
+        qi, idx = inputs
+        qi = qi.astype(jnp.float32) * scale              # [b, qc, kv, g, hd]
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qi, k_)
+        if causal:
+            qpos = q_offset + idx * qc + jnp.arange(qc)
+            kpos = jnp.arange(s)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v_)
+        return carry, o
+
+    _, outs = jax.lax.scan(
+        chunk, None,
+        (jnp.moveaxis(qr, 1, 0), jnp.arange(nchunks)),
+    )                                                    # [n, b, qc, kv, g, hd]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nchunks * qc, h, hd)
+    return out[:, :t].astype(q.dtype)
+
+
+def _sdpa_flash(q, k, v, *, causal: bool, q_chunk: int, k_chunk: int,
+                q_offset: jax.Array | int = 0):
+    """Flash-style attention: online softmax over [qc, kc] tiles.
+
+    Unlike ``_sdpa_chunked`` (which materializes a [B, H, qc, S] logits
+    slab per query chunk), only O(qc x kc) tiles ever exist — HBM traffic
+    per layer drops from ~6 full-score round-trips to the q/k/v reads
+    plus tile-sized intermediates XLA can fuse.  This is the same
+    recurrence the Pallas/TPU flash kernels implement in VMEM; expressed
+    in lax.scan so the multi-pod dry-run lowers it on any backend.
+    """
+    b, t, h, hd = q.shape
+    s, kv_ = k.shape[1], k.shape[2]
+    g = h // kv_
+    scale = hd ** -0.5
+    qc = min(q_chunk, t)
+    kc = min(k_chunk, s)
+    qpad = (-t) % qc
+    kpad = (-s) % kc
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // qc, k.shape[1] // kc
+    qr = jnp.moveaxis(q.reshape(b, nq, qc, kv_, g, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kv_, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kv_, hd), 1, 0)
+    NEG = jnp.float32(-1e30)
+
+    def q_body(_, q_in):
+        qi, qidx = q_in
+        qi = qi.astype(jnp.float32) * scale            # [b, qc, kv, g, hd]
+        qpos = q_offset + qidx * qc + jnp.arange(qc)
+
+        def k_body(carry, k_in):
+            m, l, acc = carry
+            ki, vi, kidx = k_in
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qi,
+                                ki.astype(jnp.float32))  # [b,kv,g,qc,kc]
+            kpos = kidx * kc + jnp.arange(kc)
+            ok = kpos[None, :] < s                      # key padding
+            if causal:
+                ok = ok & (qpos[:, None] >= kpos[None, :])
+            logits = jnp.where(ok[None, None, None], logits, NEG)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kv_, g, qc), NEG, jnp.float32),
+                jnp.zeros((b, kv_, g, qc), jnp.float32),
+                jnp.zeros((b, kv_, g, qc, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(k_body, init,
+                                      (kr, vr, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # [b,kv,g,qc,hd]
+        return None, jnp.moveaxis(out, 3, 1)            # [b, qc, kv, g, hd]
+
+    _, outs = jax.lax.scan(q_body, None, (qr, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * qc, h, hd)
+    return out[:, :t].astype(q.dtype)
+
+
+def _sdpa_flash_sp(q, k, v, *, causal: bool, k_chunk: int,
+                   q_offset: jax.Array | int = 0):
+    """Sequence-parallel flash attention: online softmax over key tiles,
+    NO outer query scan — the query-time axis stays a plain tensor dim, so
+    a sequence sharding pinned on the activations propagates through
+    (a lax.scan over query chunks forces its xs dim to be unsharded,
+    which replicated attention 16x across the model axis under the fsdp
+    policies; measured on granite prefill_32k).  Peak memory is one
+    [B, KV, G, T_local, kc] tile."""
+    b, t, h, hd = q.shape
+    s, kv_ = k.shape[1], k.shape[2]
+    g = h // kv_
+    scale = hd ** -0.5
+    kc = min(k_chunk, s)
+    kpad = (-s) % kc
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nk = k.shape[1] // kc
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kv_, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kv_, hd), 1, 0)
+    NEG = jnp.float32(-1e30)
+    qf = q.reshape(b, t, kv_, g, hd).astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(t)
+
+    def k_body(carry, k_in):
+        m, l, acc = carry
+        ki, vi, kidx = k_in
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                            ki.astype(jnp.float32))      # [b,kv,g,t,kc]
+        kpos = kidx * kc + jnp.arange(kc)
+        ok = kpos[None, :] < s
+        if causal:
+            ok = ok & (qpos[:, None] >= kpos[None, :])
+        logits = jnp.where(ok[None, None, None], logits, NEG)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vi.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kv_, g, t), NEG, jnp.float32),
+            jnp.zeros((b, kv_, g, t), jnp.float32),
+            jnp.zeros((b, kv_, g, t, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(k_body, init, (kr, vr, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,kv,g,t,hd]
+    return jnp.moveaxis(out, 3, 1).reshape(b, t, h, hd).astype(q.dtype)
+
+
+def _sdpa(q, k, v, cfg: AttnConfig, *, causal: bool,
+          q_offset: jax.Array | int = 0):
+    if cfg.attn_impl == "flash_sp":
+        return _sdpa_flash_sp(q, k, v, causal=causal, k_chunk=cfg.k_chunk,
+                              q_offset=q_offset)
+    if cfg.attn_impl == "flash":
+        return _sdpa_flash(q, k, v, causal=causal, q_chunk=cfg.q_chunk,
+                           k_chunk=cfg.k_chunk, q_offset=q_offset)
+    return _sdpa_chunked(q, k, v, causal=causal, q_chunk=cfg.q_chunk,
+                         q_offset=q_offset)
+
+
+def pin_activations(x: jax.Array, sharding) -> jax.Array:
+    """Pin [B, T, D] activation sharding (GSPMD left alone will sometimes
+    downgrade a 256-way batch sharding to 32-way after gather/reshape ops;
+    observed on qwen2-7b train under the fsdp policy — 8x redundant
+    compute per device).  ``sharding`` is a NamedSharding or None."""
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def attention(
+    p: Params,
+    cfg: AttnConfig,
+    x: jax.Array,              # [B, T, D]
+    positions: jax.Array,      # [B, T] or [3, B, T] for M-RoPE
+    *,
+    kv: tuple[jax.Array, jax.Array] | None = None,  # cross-attention memory
+) -> jax.Array:
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if kv is not None:
+        k, v = kv
+    out = _sdpa(q, k, v, cfg, causal=cfg.causal and kv is None)
+    b, t = x.shape[:2]
+    return dense(p["wo"], out.reshape(b, t, cfg.n_heads * cfg.head_dim))
+
+
+def attention_prefill(
+    p: Params, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+    cache_len: int,
+):
+    """Prefill returning output + a [B, cache_len, KV, hd] padded KV cache."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _sdpa(q, k, v, cfg, causal=cfg.causal)
+    b, t = x.shape[:2]
+    y = dense(p["wo"], out.reshape(b, t, cfg.n_heads * cfg.head_dim))
+    padlen = cache_len - t
+    kc = jnp.pad(k, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+    return y, (kc, vc)
+
+
+def attention_decode(
+    p: Params, cfg: AttnConfig, x: jax.Array, position: jax.Array,
+    cache: tuple[jax.Array, jax.Array], cache_index: jax.Array,
+):
+    """One-token decode. x: [B, 1, D]; cache k/v: [B, S, KV, hd].
+
+    Returns (y [B, 1, D], updated cache).  Entries beyond ``cache_index``
+    are masked out of the softmax.
+    """
+    b = x.shape[0]
+    pos = jnp.broadcast_to(position.reshape(-1, 1), (b, 1))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(position.reshape(1, -1, 1), (3, b, 1))
+    q, k, v = _project_qkv(p, cfg, x, pos)
+    kc, vc = cache
+    s = kc.shape[1]
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        kc, k.astype(kc.dtype), cache_index, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        vc, v.astype(vc.dtype), cache_index, axis=1)
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, 1, kvh, g, hd) * hd ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, None, :] <= cache_index
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, vc.astype(jnp.float32))
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    return dense(p["wo"], o), (kc, vc)
+
+
+# -------------------------------------------------------------------- MLP ---
+
+def mlp_init(key, d: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff, dtype=dtype),
+         "w_down": dense_init(ks[1], d_ff, d, dtype=dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    up = dense(p["w_up"], x)
+    if "w_gate" in p:
+        up = jax.nn.silu(dense(p["w_gate"], x)) * up     # SwiGLU
+    else:
+        up = jax.nn.gelu(up)
+    return dense(p["w_down"], up)
+
+
+# -------------------------------------------------------------- embedding ---
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table.T (f32 accumulation)."""
+    return jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32),
+        p["table"].astype(jnp.float32),
+    )
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  *, z_loss: float = 0.0) -> jax.Array:
+    """Mean token CE; optional z-loss regularizer (stabilizes big-vocab)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss > 0.0:
+        loss = loss + z_loss * lse ** 2
+    return jnp.mean(loss)

@@ -1,0 +1,250 @@
+"""Mamba2 block with the SSD (state-space duality) chunked algorithm
+(Dao & Gu 2024) — mamba2-130m and the zamba2 hybrid's backbone.
+
+Chunked SSD: sequence split into chunks of Q tokens; within a chunk the
+recurrence is evaluated as a masked quadratic (attention-like) form — MXU
+work — while a short lax.scan carries the [h, n, p] state across chunks.
+All decay factors are exp of non-positive sums (A < 0, dt > 0), so the
+computation is numerically stable without rescaling.
+
+Decode is the O(1)-state recurrent step — the reason the SSM/hybrid archs
+are the only ones assigned the long_500k cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128         # n
+    head_dim: int = 64         # p
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128           # Q (SSD chunk length)
+    norm_eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+class Mamba2State(NamedTuple):
+    """Recurrent decode state — constant size, independent of context."""
+
+    conv: jax.Array   # [B, conv_width - 1, conv_dim]
+    ssm: jax.Array    # [B, H, P, N] float32
+
+
+def mamba2_init(key, cfg: Mamba2Config, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    return {
+        "in_proj": {
+            "w": (jax.random.normal(ks[0], (d, cfg.d_in_proj)) * d ** -0.5
+                  ).astype(dtype)
+        },
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, cfg.conv_dim))
+                   * cfg.conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype=dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (cfg.n_heads,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), dtype=jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(jax.random.uniform(
+                    ks[3], (cfg.n_heads,),
+                    minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))
+            )
+        ).astype(jnp.float32),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": {
+            "w": (jax.random.normal(ks[4], (cfg.d_inner, d))
+                  * cfg.d_inner ** -0.5).astype(dtype)
+        },
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def _conv1d(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv, width K: y_t = sum_k w_k x_{t-K+1+k}."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, i : i + xbc.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(y + b[None, None, :])
+
+
+def _ssd_chunked(x, b_, c_, dt, a_log, q: int):
+    """x: [B,T,H,P]; b_/c_: [B,T,G,N]; dt: [B,T,H] (softplus'ed).
+
+    Returns y [B,T,H,P] (without the D skip term).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b_.shape[2], b_.shape[3]
+    rep = h // g
+    a = (-jnp.exp(a_log))[None, None, :] * dt                # [B,T,H] <= 0
+    pad = (-t) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    tp = x.shape[1]
+    nc = tp // q
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    bc = jnp.repeat(b_.reshape(bsz, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(c_.reshape(bsz, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    ac = a.reshape(bsz, nc, q, h).astype(jnp.float32)
+    cs = jnp.cumsum(ac, axis=2)                              # [B,nc,Q,H]
+
+    # intra-chunk quadratic form
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]         # [B,nc,Q(i),Q(j),H]
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc)
+    att = cb * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # chunk-boundary states
+    tail = jnp.exp(cs[:, :, -1:, :] - cs)                    # [B,nc,Q,H]
+    s = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", tail * dtc, bc, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                   # [B,nc,H]
+
+    def scan_fn(hstate, inp):
+        s_c, dec_c = inp
+        new = dec_c[:, :, None, None] * hstate + s_c
+        return new, hstate                                   # emit PREVIOUS
+
+    init = jnp.zeros((bsz, h, n, p), dtype=jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(s, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )                                                        # [nc,B,H,N,P]
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum(
+        "bcihn,bchnp->bcihp", cc * jnp.exp(cs)[..., None], h_prev
+    )
+    y = (y_intra + y_inter).reshape(bsz, tp, h, p)
+    return y[:, :t].astype(x.dtype)
+
+
+def mamba2_forward(p: Params, cfg: Mamba2Config, u: jax.Array) -> jax.Array:
+    """Full-sequence forward (training / prefill). u: [B, T, D]."""
+    bsz, t, _ = u.shape
+    zxbcdt = u @ p["in_proj"]["w"].astype(u.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _conv1d(xbc, p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype))
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    x = xbc[..., :di].reshape(bsz, t, h, cfg.head_dim)
+    b_ = xbc[..., di : di + g * n].reshape(bsz, t, g, n)
+    c_ = xbc[..., di + g * n :].reshape(bsz, t, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y = _ssd_chunked(x, b_, c_, dt, p["A_log"], cfg.chunk)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * x.astype(y.dtype)
+    y = y.reshape(bsz, t, di).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)  # gated norm
+    return y @ p["out_proj"]["w"].astype(u.dtype)
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int) -> Mamba2State:
+    return Mamba2State(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), jnp.float32),
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32),
+    )
+
+
+def mamba2_prefill_state(
+    p: Params, cfg: Mamba2Config, u: jax.Array
+) -> Mamba2State:
+    """Recompute the decode state after a full-sequence prefill.
+
+    Runs the recurrence chunk-wise to the final state (costs one extra
+    state pass; shares all projections with the forward)."""
+    bsz, t, _ = u.shape
+    zxbcdt = u @ p["in_proj"]["w"].astype(u.dtype)
+    _, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _conv1d(xbc_raw, p["conv_w"].astype(u.dtype),
+                  p["conv_b"].astype(u.dtype))
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    x = xbc[..., :di].reshape(bsz, t, h, cfg.head_dim).astype(jnp.float32)
+    b_ = xbc[..., di : di + g * n].reshape(bsz, t, g, n).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = (-jnp.exp(p["A_log"]))[None, None, :] * dtv          # [B,T,H]
+    rep = h // g
+    bh = jnp.repeat(b_, rep, axis=2)                          # [B,T,H,N]
+    # final state = sum_j exp(sum_{l>j} a_l) dt_j x_j B_j^T
+    rev_decay = jnp.exp(jnp.cumsum(a[:, ::-1], axis=1)[:, ::-1] - a)
+    ssm = jnp.einsum("bth,bthp,bthn->bhpn", rev_decay * dtv, x, bh)
+    conv = xbc_raw[:, t - (cfg.conv_width - 1):].astype(jnp.float32)
+    if t < cfg.conv_width - 1:
+        conv = jnp.pad(conv, ((0, 0), (cfg.conv_width - 1 - t, 0), (0, 0)))
+    return Mamba2State(conv=conv, ssm=ssm)
+
+
+def mamba2_decode_step(
+    p: Params, cfg: Mamba2Config, u: jax.Array, state: Mamba2State
+) -> tuple[jax.Array, Mamba2State]:
+    """One-token recurrent step. u: [B, 1, D] -> (y [B, 1, D], state)."""
+    bsz = u.shape[0]
+    zxbcdt = u[:, 0] @ p["in_proj"]["w"].astype(u.dtype)      # [B, dproj]
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc_t = zxbcdt[..., di : di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim :]
+    window = jnp.concatenate(
+        [state.conv, xbc_t[:, None, :].astype(jnp.float32)], axis=1
+    )                                                         # [B, W, convdim]
+    w = p["conv_w"].astype(jnp.float32)
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(jnp.float32)
+    )
+    x = xbc[..., :di].reshape(bsz, h, cfg.head_dim)
+    b_ = xbc[..., di : di + g * n].reshape(bsz, g, n)
+    c_ = xbc[..., di + g * n :].reshape(bsz, g, n)
+    rep = h // g
+    bh = jnp.repeat(b_, rep, axis=1)                          # [B,H,N]
+    ch = jnp.repeat(c_, rep, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    decay = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dtv)      # [B,H]
+    ssm = (decay[:, :, None, None] * state.ssm
+           + jnp.einsum("bh,bhp,bhn->bhpn", dtv, x, bh))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, ch) + p["D"][None, :, None] * x
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z[:, None, :]), cfg.norm_eps)
+    out = y @ p["out_proj"]["w"].astype(u.dtype)
+    return out, Mamba2State(conv=window[:, 1:], ssm=ssm)

@@ -1,0 +1,192 @@
+"""Unified model API over the four family implementations.
+
+``build(arch_config)`` returns a ``Model`` with a single interface used by
+the trainer, server, smoke tests and the dry-run:
+
+  * ``init(key) -> params``
+  * ``loss_fn(params, batch) -> scalar``              (train_step path)
+  * ``prefill(params, batch, max_len) -> (logits, cache)``
+  * ``decode_step(params, token, cache) -> (logits, cache)``
+  * ``train_batch_spec(batch, seq)`` / ``prefill_batch_spec`` /
+    ``decode_spec`` -> ShapeDtypeStruct pytrees (dry-run inputs; the
+    modality frontends are stubs that appear here as precomputed
+    embeddings, per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+class Model(NamedTuple):
+    family: str
+    config: Any
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    train_batch_spec: Callable
+    prefill_batch_spec: Callable
+    decode_spec: Callable
+    init_cache_spec: Callable   # (batch, max_len) -> cache ShapeDtypeStructs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_specs(batch, seq, vocab):
+    return {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+
+
+def build(cfg: Any, family: str) -> Model:
+    act_dtype = jnp.bfloat16
+
+    if family in ("dense", "moe", "vlm"):
+        mcfg: transformer.TransformerConfig = cfg
+
+        def loss(params, batch):
+            return transformer.loss_fn(params, mcfg, batch)
+
+        def prefill(params, batch, max_len):
+            return transformer.prefill(
+                params, mcfg, batch["tokens"], max_len,
+                positions=batch.get("positions"),
+            )
+
+        def decode(params, token, cache):
+            return transformer.decode_step(params, mcfg, token, cache)
+
+        def train_spec(b, t):
+            s = _token_specs(b, t, mcfg.vocab)
+            if family == "vlm":
+                s["positions"] = _sds((3, b, t), jnp.int32)
+            return s
+
+        def prefill_spec(b, t):
+            s = {"tokens": _sds((b, t), jnp.int32)}
+            if family == "vlm":
+                s["positions"] = _sds((3, b, t), jnp.int32)
+            return s
+
+        def cache_spec(b, s):
+            shape = (mcfg.n_layers, b, s, mcfg.n_kv_heads, mcfg.hd)
+            return transformer.KVCache(
+                k=_sds(shape, act_dtype), v=_sds(shape, act_dtype),
+                index=_sds((), jnp.int32),
+            )
+
+        return Model(
+            family=family, config=mcfg,
+            init=lambda key: transformer.init(key, mcfg),
+            loss_fn=loss, prefill=prefill, decode_step=decode,
+            train_batch_spec=train_spec, prefill_batch_spec=prefill_spec,
+            decode_spec=lambda b: _sds((b, 1), jnp.int32),
+            init_cache_spec=cache_spec,
+        )
+
+    if family == "encdec":
+        ecfg: encdec.EncDecConfig = cfg
+
+        def loss(params, batch):
+            return encdec.loss_fn(params, ecfg, batch)
+
+        def prefill(params, batch, max_len):
+            return encdec.prefill(params, ecfg, batch["frames"],
+                                  batch["tokens"], max_len)
+
+        def decode(params, token, cache):
+            return encdec.decode_step(params, ecfg, token, cache)
+
+        def train_spec(b, t):
+            return {
+                "frames": _sds((b, t, ecfg.d_model), act_dtype),
+                "tokens": _sds((b, t), jnp.int32),
+                "labels": _sds((b, t), jnp.int32),
+            }
+
+        def prefill_spec(b, t):
+            return {
+                "frames": _sds((b, t, ecfg.d_model), act_dtype),
+                "tokens": _sds((b, t), jnp.int32),
+            }
+
+        def cache_spec(b, s):
+            shape = (ecfg.n_layers, b, s, ecfg.n_kv_heads, ecfg.hd)
+            return encdec.EncDecCache(
+                k=_sds(shape, act_dtype), v=_sds(shape, act_dtype),
+                cross_k=_sds(shape, act_dtype), cross_v=_sds(shape, act_dtype),
+                index=_sds((), jnp.int32),
+            )
+
+        return Model(
+            family=family, config=ecfg,
+            init=lambda key: encdec.init(key, ecfg),
+            loss_fn=loss, prefill=prefill, decode_step=decode,
+            train_batch_spec=train_spec, prefill_batch_spec=prefill_spec,
+            decode_spec=lambda b: _sds((b, 1), jnp.int32),
+            init_cache_spec=cache_spec,
+        )
+
+    if family == "ssm":
+        scfg: ssm_lm.SSMConfig = cfg
+        mc = scfg.mamba_config()
+
+        def cache_spec(b, s):
+            return ssm_lm.SSMCache(
+                conv=_sds((scfg.n_layers, b, mc.conv_width - 1, mc.conv_dim),
+                          jnp.float32),
+                ssm=_sds((scfg.n_layers, b, mc.n_heads, mc.head_dim,
+                          mc.d_state), jnp.float32),
+                index=_sds((), jnp.int32),
+            )
+
+        return Model(
+            family=family, config=scfg,
+            init=lambda key: ssm_lm.init(key, scfg),
+            loss_fn=lambda p, b: ssm_lm.loss_fn(p, scfg, b),
+            prefill=lambda p, b, m: ssm_lm.prefill(p, scfg, b["tokens"], m),
+            decode_step=lambda p, t, c: ssm_lm.decode_step(p, scfg, t, c),
+            train_batch_spec=lambda b, t: _token_specs(b, t, scfg.vocab),
+            prefill_batch_spec=lambda b, t: {"tokens": _sds((b, t), jnp.int32)},
+            decode_spec=lambda b: _sds((b, 1), jnp.int32),
+            init_cache_spec=cache_spec,
+        )
+
+    if family == "hybrid":
+        hcfg: hybrid.HybridConfig = cfg
+        mc = hcfg.mamba_config()
+
+        def cache_spec(b, s):
+            kv_shape = (hcfg.n_apps, b, s, hcfg.n_kv_heads, hcfg.hd)
+            return hybrid.HybridCache(
+                conv=_sds((hcfg.n_layers, b, mc.conv_width - 1, mc.conv_dim),
+                          jnp.float32),
+                ssm=_sds((hcfg.n_layers, b, mc.n_heads, mc.head_dim,
+                          mc.d_state), jnp.float32),
+                k=_sds(kv_shape, act_dtype), v=_sds(kv_shape, act_dtype),
+                index=_sds((), jnp.int32),
+            )
+
+        return Model(
+            family=family, config=hcfg,
+            init=lambda key: hybrid.init(key, hcfg),
+            loss_fn=lambda p, b: hybrid.loss_fn(p, hcfg, b),
+            prefill=lambda p, b, m: hybrid.prefill(p, hcfg, b["tokens"], m),
+            decode_step=lambda p, t, c: hybrid.decode_step(p, hcfg, t, c),
+            train_batch_spec=lambda b, t: _token_specs(b, t, hcfg.vocab),
+            prefill_batch_spec=lambda b, t: {"tokens": _sds((b, t), jnp.int32)},
+            decode_spec=lambda b: _sds((b, 1), jnp.int32),
+            init_cache_spec=cache_spec,
+        )
+
+    raise ValueError(f"unknown family {family!r}")

@@ -1,0 +1,126 @@
+"""Attention-free SSM language model (mamba2-130m)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import Params
+from repro.models.mamba2 import (
+    Mamba2Config,
+    Mamba2State,
+    mamba2_decode_step,
+    mamba2_forward,
+    mamba2_init,
+    mamba2_init_state,
+    mamba2_prefill_state,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    norm_eps: float = 1e-5
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    z_loss: float = 1e-4
+
+    def mamba_config(self) -> Mamba2Config:
+        return Mamba2Config(
+            d_model=self.d_model, d_state=self.d_state,
+            head_dim=self.head_dim, expand=self.expand, chunk=self.chunk,
+            norm_eps=self.norm_eps,
+        )
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [L, B, W-1, conv_dim]
+    ssm: jax.Array    # [L, B, H, P, N]
+    index: jax.Array
+
+
+def init(key, cfg: SSMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    mcfg = cfg.mamba_config()
+    block_keys = jax.random.split(k2, cfg.n_layers)
+
+    def blk(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mamba": mamba2_init(k, mcfg, cfg.param_dtype),
+        }
+
+    return {
+        "embed": L.embedding_init(k1, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "blocks": jax.vmap(blk)(block_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def forward(params: Params, cfg: SSMConfig, tokens: jax.Array):
+    x = L.embed(params["embed"], tokens)
+    mcfg = cfg.mamba_config()
+
+    def body(x, blk):
+        x = x + mamba2_forward(blk["mamba"], mcfg,
+                               L.rmsnorm(blk["ln"], x, cfg.norm_eps))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def loss_fn(params: Params, cfg: SSMConfig, batch: dict) -> jax.Array:
+    h = forward(params, cfg, batch["tokens"])
+    logits = L.unembed(params["embed"], h)
+    return L.cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+
+
+def prefill(params: Params, cfg: SSMConfig, tokens: jax.Array, max_len: int):
+    """Returns (last-token logits, SSMCache).  max_len unused: the decode
+    state is O(1) in context length — the SSM selling point."""
+    mcfg = cfg.mamba_config()
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, blk):
+        h = L.rmsnorm(blk["ln"], x, cfg.norm_eps)
+        y = mamba2_forward(blk["mamba"], mcfg, h)
+        st = mamba2_prefill_state(blk["mamba"], mcfg, h)
+        return x + y, st
+
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h[:, -1:])[:, 0]
+    return logits, SSMCache(conv=states.conv, ssm=states.ssm,
+                            index=jnp.int32(tokens.shape[1]))
+
+
+def decode_step(params: Params, cfg: SSMConfig, token: jax.Array,
+                cache: SSMCache):
+    mcfg = cfg.mamba_config()
+    x = L.embed(params["embed"], token)
+
+    def body(x, blk_state):
+        blk, conv, ssm = blk_state
+        h = L.rmsnorm(blk["ln"], x, cfg.norm_eps)
+        y, st = mamba2_decode_step(blk["mamba"], mcfg, h,
+                                   Mamba2State(conv=conv, ssm=ssm))
+        return x + y, (st.conv, st.ssm)
+
+    x, (convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache.conv, cache.ssm)
+    )
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)[:, 0]
+    return logits, SSMCache(conv=convs, ssm=ssms, index=cache.index + 1)

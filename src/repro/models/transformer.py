@@ -1,0 +1,255 @@
+"""Decoder-only transformer LM — covers the dense (llama3, internlm2,
+qwen2, qwen3), MoE (granite, grok) and VLM-backbone (qwen2-vl) assigned
+architectures.
+
+Blocks are parameter-stacked along a leading [L, ...] axis and executed
+with lax.scan (+ optional jax.checkpoint), so a 126-layer 405B model
+AOT-compiles in one block's worth of HLO.  Decode carries a stacked KV
+cache [L, B, S, KV, hd] scanned in lock-step with the blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AttnConfig, Params
+from repro.models.moe import moe_apply, moe_apply_ep, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 500000.0
+    mrope_sections: tuple[int, int, int] | None = None
+    moe: MoESpec | None = None
+    norm_eps: float = 1e-6
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    attn_impl: str = "flash"   # "flash" | "chunked" (materialized scores)
+    param_dtype: Any = jnp.float32
+    act_dtype: Any = jnp.float32   # residual-stream dtype (bf16 halves
+    #                                HBM + wire bytes; f32 kept in norms,
+    #                                softmax and CE internals)
+    act_sharding: Any = None   # NamedSharding for [B,T,D] activations
+    moe_impl: str = "gspmd"    # "gspmd" (gather dispatch) | "ep_a2a"
+    remat: bool = True
+    remat_group: int = 0       # 0: checkpoint every layer; g>0: checkpoint
+    #                            only every g layers (sqrt-remat) — saved
+    #                            residuals drop from L*x to (L/g)*x at the
+    #                            cost of re-running g-layer groups in bwd
+    z_loss: float = 1e-4
+    aux_coef: float = 1e-2     # MoE load-balance coefficient
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_config(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+            q_chunk=self.q_chunk, k_chunk=self.k_chunk,
+            attn_impl=self.attn_impl, norm_eps=self.norm_eps,
+        )
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [L, B, S, KV, hd]
+    v: jax.Array       # [L, B, S, KV, hd]
+    index: jax.Array   # scalar int32: next write position
+
+
+def _block_init(key, cfg: TransformerConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": L.attn_init(ks[0], cfg.attn_config(), cfg.param_dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe.n_experts,
+                            dtype=cfg.param_dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                              dtype=cfg.param_dtype)
+    return p
+
+
+def init(key, cfg: TransformerConfig) -> Params:
+    k_embed, k_blocks, k_final = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    return {
+        "embed": L.embedding_init(k_embed, cfg.vocab, cfg.d_model,
+                                  cfg.param_dtype),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _block_apply(cfg: TransformerConfig, x, positions, blk):
+    acfg = cfg.attn_config()
+    x = L.pin_activations(x, cfg.act_sharding)
+    x = x + L.attention(blk["attn"], acfg, L.rmsnorm(blk["ln1"], x, cfg.norm_eps),
+                        positions)
+    h = L.rmsnorm(blk["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        if cfg.moe_impl == "ep_a2a" and cfg.act_sharding is not None:
+            y, aux = moe_apply_ep(
+                blk["moe"], h, top_k=cfg.moe.top_k,
+                n_experts=cfg.moe.n_experts,
+                act_sharding=cfg.act_sharding,
+                capacity_factor=cfg.moe.capacity_factor)
+        else:
+            y, aux = moe_apply(blk["moe"], h, top_k=cfg.moe.top_k,
+                               n_experts=cfg.moe.n_experts,
+                               capacity_factor=cfg.moe.capacity_factor)
+    else:
+        y, aux = L.mlp(blk["mlp"], h), jnp.float32(0.0)
+    return x + y, aux
+
+
+def forward(params: Params, cfg: TransformerConfig, tokens: jax.Array,
+            positions: jax.Array | None = None,
+            inputs_embeds: jax.Array | None = None):
+    """Full forward. Returns (hidden [B, T, D], aux loss)."""
+    x = inputs_embeds if inputs_embeds is not None \
+        else L.embed(params["embed"], tokens)
+    x = x.astype(cfg.act_dtype)
+    x = L.pin_activations(x, cfg.act_sharding)
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+        )
+
+    def body(carry, blk):
+        x, aux = carry
+        x, a = _block_apply(cfg, x, positions, blk)
+        return (x, aux + a), None
+
+    g = cfg.remat_group
+    if cfg.remat and g > 1 and cfg.n_layers % g == 0:
+        # sqrt-remat: an inner unchckpointed scan over g-layer groups,
+        # outer scan checkpoints only group boundaries
+        grouped = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // g, g) + a.shape[1:]),
+            params["blocks"])
+
+        def group_body(carry, grp):
+            return jax.lax.scan(body, carry, grp)
+
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(group_body), (x, jnp.float32(0.0)), grouped)
+    else:
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                   params["blocks"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def loss_fn(params: Params, cfg: TransformerConfig, batch: dict) -> jax.Array:
+    """Causal LM loss. batch: tokens [B,T], labels [B,T] (+positions)."""
+    h, aux = forward(params, cfg, batch["tokens"],
+                     positions=batch.get("positions"))
+    logits = L.unembed(params["embed"], h)
+    ce = L.cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+    return ce + cfg.aux_coef * aux
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   index=jnp.zeros((), jnp.int32))
+
+
+def prefill(params: Params, cfg: TransformerConfig, tokens: jax.Array,
+            max_len: int, positions: jax.Array | None = None,
+            cache_dtype=jnp.bfloat16):
+    """Process the prompt; returns (last-token logits [B, V], KVCache)."""
+    x = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    b, t = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                     (b, t))
+    acfg = cfg.attn_config()
+
+    def body(x, blk):
+        x = L.pin_activations(x, cfg.act_sharding)
+        h = L.rmsnorm(blk["ln1"], x, cfg.norm_eps)
+        y, (kc, vc) = L.attention_prefill(blk["attn"], acfg, h, positions,
+                                          max_len)
+        x = x + y
+        h2 = L.rmsnorm(blk["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            if cfg.moe_impl == "ep_a2a" and cfg.act_sharding is not None:
+                y2, _ = moe_apply_ep(
+                    blk["moe"], h2, top_k=cfg.moe.top_k,
+                    n_experts=cfg.moe.n_experts,
+                    act_sharding=cfg.act_sharding,
+                    capacity_factor=cfg.moe.capacity_factor)
+            else:
+                y2, _ = moe_apply(blk["moe"], h2, top_k=cfg.moe.top_k,
+                                  n_experts=cfg.moe.n_experts,
+                                  capacity_factor=cfg.moe.capacity_factor)
+        else:
+            y2 = L.mlp(blk["mlp"], h2)
+        return x + y2, (kc.astype(cache_dtype), vc.astype(cache_dtype))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["blocks"])
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h[:, -1:])[:, 0]
+    return logits, KVCache(k=ks, v=vs, index=jnp.int32(t))
+
+
+def decode_step(params: Params, cfg: TransformerConfig, token: jax.Array,
+                cache: KVCache, positions: jax.Array | None = None):
+    """One decode step. token: [B, 1]. Returns (logits [B, V], cache)."""
+    x = L.embed(params["embed"], token).astype(cfg.act_dtype)
+    acfg = cfg.attn_config()
+    pos = cache.index if positions is None else positions
+
+    def body(x, blk_kv):
+        blk, kc, vc = blk_kv
+        h = L.rmsnorm(blk["ln1"], x, cfg.norm_eps)
+        y, (kc, vc) = L.attention_decode(
+            blk["attn"], acfg, h, pos, (kc, vc), cache.index
+        )
+        x = x + y
+        h2 = L.rmsnorm(blk["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y2, _ = moe_apply(blk["moe"], h2, top_k=cfg.moe.top_k,
+                              n_experts=cfg.moe.n_experts,
+                              capacity_factor=cfg.moe.capacity_factor)
+        else:
+            y2 = L.mlp(blk["mlp"], h2)
+        return x + y2, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)[:, 0]
+    return logits, KVCache(k=ks, v=vs, index=cache.index + 1)

@@ -1,0 +1,5 @@
+"""Optimizers: AdamW w/ dtype policies, schedules, grad accumulation."""
+from repro.optim.adamw import (
+    AdamWConfig, AdamWState, accumulate_grads, global_norm, init, schedule,
+    update,
+)

@@ -1,0 +1,367 @@
+"""Trip-count-aware cost model over post-SPMD HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a while-loop body
+ONCE, independent of its trip count — so every lax.scan (over layers, over
+attention q-chunks, over SSD chunks) makes flops/bytes/collectives wrong
+by the trip count (126x for llama3's layer scan).  XLA however records
+``backend_config={"known_trip_count":{"n":"..."}}`` on each while op, so an
+HLO-text walk can attribute costs exactly:
+
+  * FLOPs       — from ``dot`` ops: 2 * prod(result dims) * prod(contracted
+                  lhs dims).  (Transformer/PiPNN compute is all dots; the
+                  elementwise remainder is <1% and intentionally ignored.)
+  * HBM bytes   — operands + result of top-level memory-moving ops
+                  (fusion, dot, copy, sort, gather/scatter, dynamic-slice/
+                  update, reduce, transpose, concatenate, broadcast, pad,
+                  convert, collectives).  Tuple-shuffling ops (bitcast,
+                  get-tuple-element, tuple, parameter, constant) are free.
+  * collective  — wire bytes per collective op with the standard ring cost
+                  model (see ``wire_bytes_for``).
+
+The walk starts at ENTRY with multiplier 1; a ``while`` multiplies its body
+and condition by the known trip count (nested scans compose); ``fusion``
+computations are descended for *flops only* (their internals don't touch
+HBM); call/conditional descend at the same multiplier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s1": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]"
+    r"(?:\{[\d,]*\})?))\s*([\w\-]+)\(([^)]*)\)(.*)$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply"
+                       r"|branch_computations)=\{?%?([\w.\-]+)")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands+result plausibly round-trip HBM when at top level
+_MEM_OPS = {
+    "fusion", "dot", "copy", "sort", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "transpose", "concatenate",
+    "broadcast", "pad", "reshape", "select-and-scatter",
+    "reduce-window", "iota", "rng-bit-generator", "cholesky",
+    "triangular-solve", "convolution", "custom-call", "reverse", "select",
+    "compare", "add", "multiply", "subtract", "divide", "exponential",
+    "tanh", "rsqrt", "maximum", "minimum", "clamp", "slice",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+# XLA:CPU's float-normalization pass widens bf16 programs to f32 with
+# convert ops that do not exist in the TPU lowering; converts/bitcasts are
+# treated as transparent so the roofline models the TPU program.
+_TRANSPARENT = {"convert", "bitcast"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(type_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "opaque", []
+    dtype, dims = m.group(1), m.group(2)
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    types: dict[str, str]   # local op/param name -> type string
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw).rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                    cur.types[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, operands, attrs = m.groups()
+        ops = [o.strip().lstrip("%") for o in operands.split(",")]
+        ops = [o.split(" ")[-1].lstrip("%") for o in ops if o]
+        op = Op(name, rtype, opcode, ops, attrs)
+        cur.ops.append(op)
+        cur.types[name] = rtype
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, rdims = shape_dims(op.result_type)
+    out = 1.0
+    for d in rdims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contracted = 1.0
+    if m and op.operands:
+        lhs_type = comp.types.get(op.operands[0], "")
+        _, ldims = shape_dims(lhs_type)
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(ldims):
+                contracted *= ldims[i]
+    return 2.0 * out * contracted
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = _GROUPS_EXPL_RE.search(attrs)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        return len([t for t in first.split(",") if t.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def wire_bytes_for(opcode: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if opcode.startswith("all-reduce"):
+        return 2.0 * nbytes * frac
+    if opcode.startswith("all-gather"):
+        return nbytes * frac              # result is the gathered tensor
+    if opcode.startswith("reduce-scatter"):
+        return nbytes * (g - 1)           # result is 1/g of the input
+    if opcode.startswith("all-to-all"):
+        return nbytes * frac
+    return float(nbytes)                  # collective-permute
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    coll_ops: list = dataclasses.field(default_factory=list)
+    mem_ops: list = dataclasses.field(default_factory=list)   # top byte movers
+    n_while: int = 0
+    unknown_trip: int = 0
+
+    def add_bytes(self, op_name: str, opcode: str, b: float, mult: float):
+        self.bytes += b * mult
+        self.mem_ops.append((opcode, op_name, b * mult, mult))
+
+    def add_collective(self, opcode: str, wire: float, g: int, mult: float):
+        key = opcode.replace("-start", "")
+        self.coll_by_op[key] = self.coll_by_op.get(key, 0.0) + wire * mult
+        self.coll_bytes += wire * mult
+        self.coll_ops.append((key, wire, g, mult))
+
+
+def analyze(text: str, *, n_devices: int) -> HloCost:
+    comps, entry = parse_hlo(text)
+    cost = HloCost()
+
+    def visit(comp_name: str, mult: float, flops_only: bool = False):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                cost.n_while += 1
+                m = _TRIP_RE.search(op.attrs)
+                trip = int(m.group(1)) if m else 1
+                if not m:
+                    cost.unknown_trip += 1
+                for target in _call_targets(op):
+                    visit(target, mult * trip, flops_only)
+                continue
+            if oc == "fusion":
+                if not flops_only:
+                    cost.add_bytes(op.name, oc, _fusion_bytes(op, comp), mult)
+                for target in _call_targets(op):
+                    visit(target, mult, flops_only=True)
+                continue
+            if oc in ("call", "conditional", "async-start"):
+                for target in _call_targets(op):
+                    visit(target, mult, flops_only)
+                continue
+            if oc == "dot":
+                cost.flops += mult * _dot_flops(op, comp)
+                if not flops_only:
+                    cost.add_bytes(op.name, oc, _op_bytes(op, comp), mult)
+                continue
+            if oc == "convolution":
+                # rare here (frontends stubbed); approximate via result*2*K
+                cost.flops += mult * 2.0 * shape_bytes(op.result_type)
+                if not flops_only:
+                    cost.bytes += mult * _op_bytes(op, comp)
+                continue
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not oc.endswith("-done"):
+                if not flops_only:
+                    nbytes = _coll_payload_bytes(op, comp)
+                    g = _group_size(op.attrs, n_devices)
+                    cost.add_collective(base, wire_bytes_for(base, nbytes, g),
+                                        g, mult)
+                    cost.add_bytes(op.name, base, _op_bytes(op, comp), mult)
+                continue
+            if not flops_only and oc in _MEM_OPS:
+                cost.add_bytes(op.name, oc, _op_bytes(op, comp), mult)
+
+    def _op_bytes(op: Op, comp: Computation) -> float:
+        """HBM traffic of one op.  Sliced accesses only touch the slice:
+
+          * dynamic-slice / gather / slice read ``result`` bytes, not the
+            full operand (XLA reads the addressed window);
+          * dynamic-update-slice writes (and reads) the ``update`` operand
+            region in place — the big operand is aliased, not copied.
+        """
+        oc = op.opcode
+        if oc in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * shape_bytes(op.result_type)
+        if oc == "dynamic-update-slice" and len(op.operands) >= 2:
+            upd = comp.types.get(op.operands[1], "")
+            return 2.0 * shape_bytes(upd)
+        total = float(shape_bytes(op.result_type))
+        for o in op.operands:
+            t = comp.types.get(o)
+            if t:
+                total += shape_bytes(t)
+        return total
+
+    def _fusion_bytes(op: Op, comp: Computation) -> float:
+        """Traffic of a fusion: parameters used only through slicing ops
+        inside the fused computation count their sliced windows, not the
+        whole array (the layer-stacked weight/cache tensors threaded
+        through scan bodies would otherwise be charged in full each
+        iteration).  A DUS root writes its update region in place."""
+        called = None
+        for target in _call_targets(op):
+            called = comps.get(target)
+            break
+        if called is None:
+            return _op_bytes(op, comp)
+        pnames = [n for n in called.types if n.startswith("param")]
+        # parameters are declared in order param_0, param_1, ...
+        pnames.sort(key=lambda s: [int(x) for x in re.findall(r"\d+", s)]
+                    or [0])
+
+        def terminal_uses(name: str, depth: int = 0) -> list[Op]:
+            """Users of ``name``, looking through convert/bitcast chains."""
+            out: list[Op] = []
+            for o in called.ops:
+                if name in o.operands:
+                    if o.opcode in _TRANSPARENT and depth < 8:
+                        out.extend(terminal_uses(o.name, depth + 1))
+                    else:
+                        out.append(o)
+            return out
+
+        def windowed_bytes(pname: str, u: Op) -> float | None:
+            """Bytes actually touched if the use is a windowed access."""
+            if u.opcode in ("dynamic-slice", "gather", "slice"):
+                return float(shape_bytes(u.result_type))
+            if u.opcode == "dynamic-update-slice" and u.operands \
+                    and u.operands[0] == pname:
+                return 0.0   # in-place target; root handling counts the update
+            return None
+
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            t = comp.types.get(operand, "")
+            if i >= len(pnames):
+                total += shape_bytes(t)
+                continue
+            uses = terminal_uses(pnames[i])
+            win = [windowed_bytes(pnames[i], u) for u in uses]
+            # NB: transparent chains rename the value; a DUS targeting the
+            # converted alias still means in-place on TPU — match by chain.
+            if uses and all(w is not None or
+                            (u.opcode == "dynamic-update-slice")
+                            for u, w in zip(uses, win)):
+                total += sum(w or 0.0 for w in win)
+            else:
+                total += shape_bytes(t)
+        # root: look through transparent wrappers for an in-place DUS
+        root = called.ops[-1] if called.ops else None
+        by_name = {o.name: o for o in called.ops}
+        depth = 0
+        while root is not None and root.opcode in _TRANSPARENT and depth < 8:
+            root = by_name.get(root.operands[0]) if root.operands else None
+            depth += 1
+        if root is not None and root.opcode == "dynamic-update-slice" \
+                and len(root.operands) >= 2:
+            total += 2.0 * shape_bytes(called.types.get(root.operands[1], ""))
+        else:
+            total += shape_bytes(op.result_type)
+        return total
+
+    def _coll_payload_bytes(op: Op, comp: Computation) -> int:
+        # use the LARGER of result / first operand (all-gather result vs
+        # reduce-scatter operand conventions)
+        rb = shape_bytes(op.result_type)
+        ob = max((shape_bytes(comp.types.get(o, "")) for o in op.operands),
+                 default=0)
+        if op.opcode.startswith("reduce-scatter"):
+            return rb   # wire model multiplies by (g-1)
+        if op.opcode.startswith("all-gather"):
+            return rb
+        return max(rb, ob)
+
+    def _call_targets(op: Op) -> Iterable[str]:
+        return _CALLS_RE.findall(op.attrs)
+
+    visit(entry, 1.0)
+    cost.coll_ops.sort(key=lambda t: -t[1] * t[3])
+    cost.coll_ops = cost.coll_ops[:40]
+    cost.mem_ops.sort(key=lambda t: -t[2])
+    cost.mem_ops = cost.mem_ops[:40]
+    return cost

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch, run one forward/train step and one prefill+decode step on
+CPU, assert output shapes and no NaNs.  (Full configs are exercised only
+via the dry-run, per the assignment.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model_zoo
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_batch(model, b=2, t=16):
+    spec = model.train_batch_spec(b, t)
+    rng = np.random.default_rng(0)
+    out = {}
+    for k, s in spec.items():
+        if s.dtype == jnp.int32:
+            if k == "positions":
+                pos = np.broadcast_to(np.arange(t, dtype=np.int32), s.shape)
+                out[k] = jnp.asarray(pos.copy())
+            else:
+                hi = getattr(model.config, "vocab", 256)
+                out[k] = jnp.asarray(
+                    rng.integers(0, min(hi, 250), s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_full_config_matches_assignment(arch_id):
+    cfg = get_config(arch_id)
+    m = cfg.model
+    expect = {
+        "llama3-405b": (126, 16384, 128, 8, 53248),
+        "internlm2-20b": (48, 6144, 48, 8, 16384),
+        "qwen2-7b": (28, 3584, 28, 4, 18944),
+        "qwen3-14b": (40, 5120, 40, 8, 17408),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512),
+        "grok-1-314b": (64, 6144, 48, 8, 32768),
+        "whisper-tiny": (4, 384, 6, 6, 1536),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240),
+    }
+    if arch_id == "mamba2-130m":
+        assert (m.n_layers, m.d_model, m.vocab, m.d_state) == \
+            (24, 768, 50288, 128)
+        return
+    L, d, h, kv, ff = expect[arch_id]
+    assert m.n_layers == L and m.d_model == d and m.d_ff == ff
+    assert m.n_heads == h and m.n_kv_heads == kv
+    if arch_id == "granite-moe-1b-a400m":
+        assert (m.moe.n_experts, m.moe.top_k) == (32, 8)
+    if arch_id == "grok-1-314b":
+        assert (m.moe.n_experts, m.moe.top_k) == (8, 2)
+    if arch_id == "qwen3-14b":
+        assert m.qk_norm
+    if arch_id in ("qwen2-7b", "qwen2-vl-7b"):
+        assert m.qkv_bias
+    if arch_id == "qwen2-vl-7b":
+        assert m.mrope_sections is not None
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    cfg = get_config(arch_id)
+    model = model_zoo.build(cfg.smoke_model, cfg.family)
+    params = model.init(KEY)
+    batch = _smoke_batch(model)
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch_id} loss {loss}"
+    for path, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        a = np.asarray(leaf)
+        assert np.isfinite(a).all(), f"{arch_id} NaN grad at {path}"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch_id):
+    cfg = get_config(arch_id)
+    model = model_zoo.build(cfg.smoke_model, cfg.family)
+    params = model.init(KEY)
+    b, t, max_len = 2, 8, 16
+    spec = model.prefill_batch_spec(b, t)
+    rng = np.random.default_rng(1)
+    batch = {}
+    for k, s in spec.items():
+        if s.dtype == jnp.int32:
+            if k == "positions":
+                batch[k] = jnp.asarray(np.broadcast_to(
+                    np.arange(t, dtype=np.int32), s.shape).copy())
+            else:
+                batch[k] = jnp.asarray(rng.integers(0, 250, s.shape), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    logits, cache = model.prefill(params, batch, max_len)
+    vocab = model.config.vocab
+    assert logits.shape == (b, vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all(), arch_id
+    tok = jnp.asarray(rng.integers(0, 250, (b, 1)), jnp.int32)
+    logits2, cache2 = model.decode_step(params, tok, cache)
+    assert logits2.shape == (b, vocab)
+    assert np.isfinite(np.asarray(logits2, dtype=np.float32)).all(), arch_id
+    assert int(cache2.index) == int(cache.index) + 1
+
+
+def test_registry_covers_all_ten():
+    assert len(ARCH_IDS) == 10
+    fams = {get_config(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "moe", "encdec", "vlm", "ssm", "hybrid"}
+
+
+def test_long_500k_eligibility():
+    eligible = {a for a in ARCH_IDS if get_config(a).sub_quadratic}
+    assert eligible == {"mamba2-130m", "zamba2-2.7b"}
+    # 40-cell accounting: 10 archs x 4 shapes; 8 long_500k skips documented
+    total_runnable = sum(len(get_config(a).runnable_cells()) for a in ARCH_IDS)
+    total_skipped = sum(len(get_config(a).skipped_cells()) for a in ARCH_IDS)
+    assert total_runnable == 32
+    assert total_runnable + total_skipped == 40

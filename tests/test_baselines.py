@@ -1,0 +1,81 @@
+"""Baseline builders (Vamana / HNSW / HCNNG) must produce searchable graphs
+of reasonable recall — they anchor the benchmark comparisons."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    HCNNGParams,
+    HNSWParams,
+    VamanaParams,
+    build_hcnng,
+    build_hnsw,
+    build_vamana,
+)
+from repro.core.beam_search import beam_search_np, brute_force_knn, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(9)
+    return rng.standard_normal((1200, 16)).astype(np.float32)
+
+
+def _recall(graph, start, x, n_q=60, beam=48):
+    q = x[:n_q]
+    truth = brute_force_knn(x, q, 11)
+    t = np.array([row[row != i][:10] for i, row in enumerate(truth)])
+    f = np.full((n_q, 10), -1, dtype=np.int64)
+    for i in range(n_q):
+        ids, _, _ = beam_search_np(graph, x, q[i], start=start, beam=beam)
+        ids = ids[ids != i][:10]
+        f[i, : len(ids)] = ids
+    return recall_at_k(f, t, 10)
+
+
+def test_vamana_build_quality(data):
+    graph, start, stats = build_vamana(
+        data, VamanaParams(max_deg=24, beam=48, passes=1, seed=0)
+    )
+    assert graph.shape == (len(data), 24)
+    r = _recall(graph, start, data)
+    assert r > 0.9, f"vamana recall {r}"
+    assert stats["dist_comps"] > 0
+
+
+def test_vamana_two_pass_at_least_as_good(data):
+    g1, s1, _ = build_vamana(data, VamanaParams(max_deg=24, beam=48, passes=1))
+    g2, s2, _ = build_vamana(data, VamanaParams(max_deg=24, beam=48, passes=2))
+    r1, r2 = _recall(g1, s1, data), _recall(g2, s2, data)
+    assert r2 >= r1 - 0.05, f"2-pass {r2} much worse than 1-pass {r1}"
+
+
+def test_hnsw_build_quality(data):
+    graph, entry, stats = build_hnsw(
+        data, HNSWParams(m=12, ef_construction=48, seed=0)
+    )
+    r = _recall(graph, entry, data)
+    assert r > 0.85, f"hnsw recall {r}"
+    assert stats["max_level"] >= 1
+
+
+def test_hcnng_build_quality(data):
+    graph, start, stats = build_hcnng(
+        data, HCNNGParams(c_max=256, replicas=8, max_deg=90, seed=0)
+    )
+    r = _recall(graph, start, data)
+    assert r > 0.8, f"hcnng recall {r}"
+    # the paper's critique: density grows with replicas
+    g2, _, _ = build_hcnng(data, HCNNGParams(c_max=256, replicas=16, seed=0))
+    assert (g2 >= 0).sum() > (graph >= 0).sum()
+
+
+def test_no_self_loops_all_baselines(data):
+    for builder, p in [
+        (build_vamana, VamanaParams(max_deg=16, beam=32)),
+        (build_hnsw, HNSWParams(m=8, ef_construction=32)),
+        (build_hcnng, HCNNGParams(c_max=256, replicas=4)),
+    ]:
+        graph, _, _ = builder(data, p)
+        rows = np.broadcast_to(np.arange(len(data))[:, None], graph.shape)
+        v = graph >= 0
+        assert (graph[v] != rows[v]).all(), builder.__name__

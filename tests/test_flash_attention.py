@@ -1,0 +1,70 @@
+"""Flash (online-softmax) attention variants vs the chunked oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _qkv(b, t, h, kv, hd, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, t, h, hd)).astype(dtype))
+    k = jnp.asarray(rng.standard_normal((b, t, kv, hd)).astype(dtype))
+    v = jnp.asarray(rng.standard_normal((b, t, kv, hd)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("t,qc,kc", [(128, 32, 32), (100, 64, 48),
+                                     (96, 96, 16)])
+def test_flash_matches_chunked(causal, t, qc, kc):
+    q, k, v = _qkv(2, t, 8, 2, 16)
+    ref = L._sdpa_chunked(q, k, v, causal=causal, q_chunk=qc)
+    out = L._sdpa_flash(q, k, v, causal=causal, q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_sp_matches_chunked(causal):
+    q, k, v = _qkv(2, 120, 4, 4, 8, seed=3)
+    ref = L._sdpa_chunked(q, k, v, causal=causal, q_chunk=40)
+    out = L._sdpa_flash_sp(q, k, v, causal=causal, k_chunk=48)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_decode_semantics():
+    """q_offset shifts the causal frontier (continuation prefill)."""
+    q, k, v = _qkv(1, 64, 2, 2, 8, seed=1)
+    for impl in ("flash", "flash_sp"):
+        fn = (L._sdpa_flash if impl == "flash" else L._sdpa_flash_sp)
+        kw = dict(q_chunk=16) if impl == "flash" else {}
+        out = fn(q, k, v, causal=True, k_chunk=16, q_offset=5, **kw)
+        ref = L._sdpa_chunked(q, k, v, causal=True, q_chunk=16, q_offset=5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = _qkv(1, 64, 4, 2, 16, seed=2)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    out = L._sdpa_flash_sp(qb, kb, vb, causal=True, k_chunk=32)
+    ref = L._sdpa_chunked(q, k, v, causal=True, q_chunk=32)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref), atol=0.05, rtol=0.05)
+
+
+def test_gqa_grouping_consistency():
+    """flash GQA must equal per-head attention with repeated kv heads."""
+    b, t, h, kv, hd = 1, 48, 8, 2, 8
+    q, k, v = _qkv(b, t, h, kv, hd, seed=4)
+    out = L._sdpa_flash_sp(q, k, v, causal=True, k_chunk=16)
+    krep = jnp.repeat(k, h // kv, axis=2)
+    vrep = jnp.repeat(v, h // kv, axis=2)
+    ref = L._sdpa_chunked(q, krep, vrep, causal=True, q_chunk=t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

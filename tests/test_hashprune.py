@@ -1,0 +1,185 @@
+"""HashPrune unit + property tests.
+
+The crown jewels: Theorem 3.1 (history independence / order-freedom) and the
+mergeability lemma, checked by hypothesis against the streaming Algorithm 3
+reference and the sort-based closed form.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hashprune import (
+    INVALID_ID,
+    Reservoir,
+    canonicalize,
+    hashprune_batch,
+    hashprune_flat,
+    hashprune_merge,
+    hashprune_stream,
+    reservoir_init,
+)
+
+
+def brute_force_reference(ids, hashes, dists, l_max):
+    """Closed form of Thm 3.1, in pure python: nearest per bucket, then
+    l_max nearest overall, ties by id."""
+    best = {}
+    for i, h, d in zip(ids, hashes, dists):
+        if i < 0 or not np.isfinite(d):
+            continue
+        if h not in best or (d, i) < best[h]:
+            best[h] = (d, i)
+    winners = sorted(best.values())[:l_max]
+    return [(i, d) for d, i in winners]
+
+
+def as_pairs(res: Reservoir):
+    res = canonicalize(res)
+    ids = np.asarray(res.ids)[0]
+    ds = np.asarray(res.dists)[0]
+    return [(int(i), float(d)) for i, d in zip(ids, ds) if i != -1]
+
+
+cand_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=50),      # id
+        st.integers(min_value=0, max_value=7),       # hash (small => collisions)
+        st.sampled_from([0.5, 1.0, 1.5, 2.0, 3.0, 5.0]),  # dist (ties likely)
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+def _dedupe_id_hash(cands):
+    """An id must map to one hash (ids hash deterministically in PiPNN)."""
+    seen = {}
+    out = []
+    for i, h, d in cands:
+        h = seen.setdefault(i, h)
+        out.append((i, h, d))
+    return out
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(cands=cand_strategy, l_max=st.sampled_from([1, 2, 4, 8]),
+                  seed=st.integers(0, 2**31 - 1))
+def test_stream_matches_closed_form_any_order(cands, l_max, seed):
+    cands = _dedupe_id_hash(cands)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(cands))
+    ids = np.array([cands[p][0] for p in perm], dtype=np.int32)
+    hs = np.array([cands[p][1] for p in perm], dtype=np.int32)
+    ds = np.array([cands[p][2] for p in perm], dtype=np.float32)
+
+    res_s = hashprune_stream(jnp.asarray(ids), jnp.asarray(hs), jnp.asarray(ds), l_max=l_max)
+    res_b = hashprune_batch(jnp.asarray(ids)[None], jnp.asarray(hs)[None],
+                            jnp.asarray(ds)[None], l_max=l_max)
+
+    # dedupe candidates by id for the reference (same id same hash+dist? dist
+    # may differ across duplicates in the stream; reference keeps min (d,i))
+    expect = brute_force_reference(ids, hs, ds, l_max)
+    assert as_pairs(res_s) == pytest.approx(expect)
+    assert as_pairs(res_b) == pytest.approx(expect)
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(cands=cand_strategy, l_max=st.sampled_from([2, 4, 8]),
+                  cut=st.integers(0, 40), seed=st.integers(0, 2**31 - 1))
+def test_merge_lemma(cands, l_max, cut, seed):
+    """R(R(C1) U C2) == R(C1 U C2) for any split point."""
+    cands = _dedupe_id_hash(cands)
+    cut = min(cut, len(cands))
+    c1, c2 = cands[:cut], cands[cut:]
+
+    def arrs(c):
+        if not c:
+            return (jnp.full((1, 1), INVALID_ID, jnp.int32),
+                    jnp.zeros((1, 1), jnp.int32),
+                    jnp.full((1, 1), jnp.inf, jnp.float32))
+        return (jnp.asarray([[i for i, _, _ in c]], dtype=jnp.int32),
+                jnp.asarray([[h for _, h, _ in c]], dtype=jnp.int32),
+                jnp.asarray([[d for _, _, d in c]], dtype=jnp.float32))
+
+    r1 = hashprune_batch(*arrs(c1), l_max=l_max)
+    merged = hashprune_merge(r1, cand_ids=arrs(c2)[0], cand_hashes=arrs(c2)[1],
+                             cand_dists=arrs(c2)[2])
+    oneshot = hashprune_batch(*arrs(cands), l_max=l_max)
+    assert as_pairs(merged) == pytest.approx(as_pairs(oneshot))
+
+
+def test_flat_matches_batch_multi_point():
+    rng = np.random.default_rng(3)
+    n, e = 20, 500
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, 50, e).astype(np.int32)
+    # deterministic hash per (src, dst) pair
+    hashes = ((src * 31 + dst * 7) % 16).astype(np.int32)
+    dist = ((dst * 131 + src * 17) % 97 / 10.0).astype(np.float32)
+    l_max = 8
+    res = hashprune_flat(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
+                         jnp.asarray(dist), n_points=n, l_max=l_max)
+    for p in range(n):
+        m = src == p
+        expect = brute_force_reference(dst[m], hashes[m], dist[m], l_max)
+        got = as_pairs(Reservoir(res.ids[p:p+1], res.hashes[p:p+1], res.dists[p:p+1]))
+        assert got == pytest.approx(expect), f"point {p}"
+
+
+def test_flat_drops_padding():
+    n = 4
+    src = jnp.asarray([0, 1, n, n], dtype=jnp.int32)  # last two are padding
+    dst = jnp.asarray([1, 0, INVALID_ID, INVALID_ID], dtype=jnp.int32)
+    hashes = jnp.zeros(4, jnp.int32)
+    dist = jnp.asarray([1.0, 1.0, np.inf, np.inf], dtype=jnp.float32)
+    res = hashprune_flat(src, dst, hashes, dist, n_points=n, l_max=4)
+    ids = np.asarray(res.ids)
+    assert ids[0, 0] == 1 and ids[1, 0] == 0
+    assert (ids[2:] == -1).all()
+    assert (ids[:2, 1:] == -1).all()
+
+
+def test_reservoir_capacity_and_eviction():
+    # 5 distinct hashes, l_max 3 -> keep 3 nearest
+    ids = jnp.asarray([[10, 11, 12, 13, 14]], dtype=jnp.int32)
+    hs = jnp.asarray([[0, 1, 2, 3, 4]], dtype=jnp.int32)
+    ds = jnp.asarray([[5.0, 1.0, 3.0, 2.0, 4.0]], dtype=jnp.float32)
+    res = hashprune_batch(ids, hs, ds, l_max=3)
+    assert as_pairs(res) == [(11, 1.0), (13, 2.0), (12, 3.0)]
+
+
+def test_collision_keeps_closer():
+    ids = jnp.asarray([[10, 11]], dtype=jnp.int32)
+    hs = jnp.asarray([[7, 7]], dtype=jnp.int32)
+    ds = jnp.asarray([[2.0, 1.0]], dtype=jnp.float32)
+    res = hashprune_batch(ids, hs, ds, l_max=8)
+    assert as_pairs(res) == [(11, 1.0)]
+
+
+def test_empty_input():
+    res = hashprune_batch(
+        jnp.full((2, 3), INVALID_ID, jnp.int32),
+        jnp.zeros((2, 3), jnp.int32),
+        jnp.full((2, 3), jnp.inf, jnp.float32),
+        l_max=4,
+    )
+    assert (np.asarray(res.ids) == -1).all()
+
+
+def test_stream_order_invariance_direct():
+    """Directly permute the stream and compare reservoirs (Thm 3.1)."""
+    rng = np.random.default_rng(0)
+    ids = np.arange(30, dtype=np.int32)
+    hs = (ids % 5).astype(np.int32)
+    ds = rng.uniform(0, 10, 30).astype(np.float32)
+    base = None
+    for trial in range(5):
+        perm = rng.permutation(30)
+        r = hashprune_stream(jnp.asarray(ids[perm]), jnp.asarray(hs[perm]),
+                             jnp.asarray(ds[perm]), l_max=4)
+        pairs = as_pairs(r)
+        if base is None:
+            base = pairs
+        assert pairs == pytest.approx(base)

@@ -1,0 +1,91 @@
+"""The trip-count-aware HLO cost walker — the §Roofline measurement tool
+must itself be correct."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hlo_cost as H
+from repro.roofline.analysis import collective_bytes
+
+
+def test_scan_trip_count_exact():
+    def scanned(w, x):
+        def body(c, _):
+            x, i = c
+            def inner(y, _):
+                return jnp.tanh(y @ w), None
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return (y, i + 1), None
+        (x, _), _ = jax.lax.scan(body, (x, 0), None, length=17)
+        return x
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = jax.jit(scanned).lower(w, x).compile().as_text()
+    c = H.analyze(txt, n_devices=1)
+    expect = 17 * 5 * 2 * 128 ** 3
+    assert abs(c.flops - expect) / expect < 1e-6
+    assert c.n_while == 2 and c.unknown_trip == 0
+
+
+def test_plain_dot_flops_and_bytes():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    c = H.analyze(txt, n_devices=1)
+    assert abs(c.flops - 2 * 64 * 256 * 32) < 1
+    io_bytes = (64 * 256 + 256 * 32 + 64 * 32) * 4
+    assert c.bytes >= io_bytes            # at least the operand/result IO
+    assert c.bytes <= 3 * io_bytes        # and no wild overcount
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    c = H.analyze(txt, n_devices=1)
+    assert abs(c.flops - 4 * 2 * 32 * 64 * 16) < 1
+
+
+def test_wire_model():
+    assert H.wire_bytes_for("all-reduce", 100, 4) == 2 * 100 * 3 / 4
+    assert H.wire_bytes_for("all-gather", 100, 4) == 100 * 3 / 4
+    assert H.wire_bytes_for("reduce-scatter", 100, 4) == 300
+    assert H.wire_bytes_for("collective-permute", 100, 4) == 100
+    assert H.wire_bytes_for("all-reduce", 100, 1) == 0
+
+
+def test_comment_and_tuple_parsing():
+    txt = """HloModule m, num_partitions=4
+
+%region_0 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%g, %g)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,8]) -> f32[8,8] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,8]{1,0} parameter(1)
+  ROOT %d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="x"}
+}
+"""
+    comps, entry = H.parse_hlo(txt)
+    assert entry == "main.29" or entry == "main"
+    c = H.analyze(txt, n_devices=4)
+    assert c.flops == 2 * 8 * 16 * 8
+
+
+def test_dynamic_slice_counts_window_only():
+    def f(big, idx):
+        return jax.lax.dynamic_slice(big, (idx, 0), (8, 128))
+
+    big = jax.ShapeDtypeStruct((4096, 128), jnp.float32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    txt = jax.jit(f).lower(big, idx).compile().as_text()
+    c = H.analyze(txt, n_devices=1)
+    # must NOT charge the whole 2MB operand
+    assert c.bytes < 4096 * 128 * 4 / 2, c.bytes

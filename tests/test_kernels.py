@@ -1,0 +1,163 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+INTERP = True  # CPU container: kernels execute in interpret mode
+
+
+# ------------------------------------------------------------- distance ---
+
+SHAPES = [
+    (1, 8, 8, 4),       # tiny, heavy padding
+    (2, 128, 128, 32),  # exact tiles
+    (3, 100, 200, 17),  # ragged everything
+    (1, 257, 129, 128), # off-by-one over tiles
+]
+
+
+@pytest.mark.parametrize("b,m,n,d", SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_distance_matches_ref(b, m, n, d, metric, dtype):
+    rng = np.random.default_rng(hash((b, m, n, d, metric)) % 2**31)
+    a = jnp.asarray(rng.standard_normal((b, m, d)), dtype=dtype)
+    bb = jnp.asarray(rng.standard_normal((b, n, d)), dtype=dtype)
+    got = ops.pairwise_distance(a, bb, metric=metric, interpret=INTERP)
+    want = ref.pairwise_distance_ref(a, bb, metric=metric)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("b,m,n,d", [(1, 16, 16, 8), (2, 130, 70, 100)])
+def test_pairwise_distance_int8_exact(b, m, n, d):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, (b, m, d)), dtype=jnp.int8)
+    bb = jnp.asarray(rng.integers(-128, 128, (b, n, d)), dtype=jnp.int8)
+    got = ops.pairwise_distance_int8(a, bb, interpret=INTERP)
+    want = ref.pairwise_distance_int8_ref(a, bb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pairwise_distance_int8_rejects_float():
+    a = jnp.zeros((1, 8, 8), jnp.float32)
+    with pytest.raises(TypeError):
+        ops.pairwise_distance_int8(a, a, interpret=INTERP)
+
+
+# -------------------------------------------------------------- FlashKNN ---
+
+@pytest.mark.parametrize("c,d,k", [(32, 8, 2), (128, 32, 4), (200, 64, 3),
+                                   (260, 16, 8)])
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+def test_leaf_topk_matches_ref(c, d, k, metric):
+    rng = np.random.default_rng(hash((c, d, k)) % 2**31)
+    pts = jnp.asarray(rng.standard_normal((2, c, d)), dtype=jnp.float32)
+    valid = np.ones((2, c), dtype=bool)
+    valid[0, c // 2 :] = False  # one heavily padded leaf
+    valid[1, ::7] = False       # scattered invalids
+    vj = jnp.asarray(valid)
+    gi, gv = ops.leaf_topk(pts, vj, k=k, metric=metric, interpret=INTERP)
+    wi, wv = ref.leaf_topk_ref(pts, vj, k=k, metric=metric)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_leaf_topk_duplicate_points_tiebreak():
+    """Duplicate points => zero distances; ties must break identically."""
+    pts = jnp.zeros((1, 64, 8), dtype=jnp.float32)
+    valid = jnp.ones((1, 64), dtype=bool)
+    gi, gv = ops.leaf_topk(pts, valid, k=3, interpret=INTERP)
+    wi, wv = ref.leaf_topk_ref(pts, valid, k=3)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert (np.asarray(gv) == 0).all()
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    c=st.integers(4, 80),
+    d=st.integers(2, 40),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_leaf_topk_property(c, d, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((1, c, d)), dtype=jnp.float32)
+    valid = jnp.asarray(rng.random((1, c)) > 0.2)
+    gi, gv = ops.leaf_topk(pts, valid, k=k, interpret=INTERP)
+    wi, wv = ref.leaf_topk_ref(pts, valid, k=k)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+# ----------------------------------------------------------- rowwise topk ---
+
+@pytest.mark.parametrize("b,m,n,k", [(1, 8, 8, 2), (2, 128, 300, 4),
+                                     (1, 100, 1000, 8)])
+def test_rowwise_topk_matches_ref(b, m, n, k):
+    rng = np.random.default_rng(hash((b, m, n, k)) % 2**31)
+    d = rng.standard_normal((b, m, n)).astype(np.float32)
+    d[rng.random((b, m, n)) < 0.1] = np.inf  # masked entries
+    dj = jnp.asarray(d)
+    gi, gv = ops.rowwise_topk(dj, k=k, interpret=INTERP)
+    wi, wv = ref.rowwise_topk_ref(dj, k=k)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_rowwise_topk_all_masked_row():
+    d = jnp.full((1, 4, 16), jnp.inf)
+    gi, gv = ops.rowwise_topk(d, k=3, interpret=INTERP)
+    assert (np.asarray(gi) == -1).all()
+    assert np.isinf(np.asarray(gv)).all()
+
+
+# -------------------------------------------------------------- edge hash ---
+
+@pytest.mark.parametrize("e,m", [(1, 12), (128, 12), (1000, 16), (257, 8)])
+def test_edge_hashes_match_sketch_module(e, m):
+    from repro.core import sketch as _sketch
+
+    rng = np.random.default_rng(e * 31 + m)
+    s = jnp.asarray(rng.standard_normal((e, m)), dtype=jnp.float32)
+    t = jnp.asarray(rng.standard_normal((e, m)), dtype=jnp.float32)
+    got = ops.edge_hashes(s, t, interpret=INTERP)
+    want = _sketch.hash_from_sketches(t, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_edge_hash_range():
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.standard_normal((500, 12)), dtype=jnp.float32)
+    t = jnp.asarray(rng.standard_normal((500, 12)), dtype=jnp.float32)
+    h = np.asarray(ops.edge_hashes(s, t, interpret=INTERP))
+    assert (h >= 0).all() and (h < 2**12).all()
+
+
+# ----------------------------------------------- kernel-powered PiPNN build ---
+
+def test_full_build_with_flashknn_matches_jax_path():
+    """The fused kernel must produce the same index as the pure-JAX path."""
+    from repro.core import pipnn
+    from repro.core.leaf import LeafParams
+    from repro.core.pipnn import PiPNNParams
+    from repro.core.rbc import RBCParams
+
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((1500, 16)).astype(np.float32)
+    params = PiPNNParams(
+        rbc=RBCParams(c_max=128, c_min=16, fanout=(3,)),
+        leaf=LeafParams(k=2, leaf_chunk=4),
+        l_max=32, max_deg=16, seed=1,
+    )
+    i_jax = pipnn.build(x, params)
+    i_krn = pipnn.build(x, params, knn_fn=ops.make_knn_fn(2, "l2", INTERP))
+    np.testing.assert_array_equal(i_jax.graph, i_krn.graph)

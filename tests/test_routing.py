@@ -1,0 +1,61 @@
+"""Properties of the capacity-routed group-by (shared by the distributed
+PiPNN build and the EP MoE dispatch)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.distributed.routing import group_by_capacity
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.data())
+def test_group_by_capacity_properties(data):
+    rng_seed = data.draw(st.integers(0, 2**16))
+    n = data.draw(st.integers(1, 200))
+    n_groups = data.draw(st.integers(1, 8))
+    cap = data.draw(st.integers(1, 64))
+    rng = np.random.default_rng(rng_seed)
+    keys = rng.integers(0, n_groups, n).astype(np.int32)
+    valid = rng.random(n) > 0.2
+    payload = np.arange(n, dtype=np.int32)
+
+    (out,), mask = group_by_capacity(
+        jnp.asarray(keys), jnp.asarray(valid), n_groups, cap,
+        [jnp.asarray(payload)])
+    out, mask = np.asarray(out), np.asarray(mask)
+
+    # every emitted slot holds a valid entry routed to the right group
+    for g in range(n_groups):
+        got = out[g][mask[g]]
+        assert all(keys[i] == g and valid[i] for i in got)
+        assert len(set(got.tolist())) == len(got), "duplicates"
+        expect = min(int((valid & (keys == g)).sum()), cap)
+        assert len(got) == expect, "drops only on capacity overflow"
+    # nothing valid is lost unless its group was full
+    emitted = set(out[mask].tolist())
+    for i in range(n):
+        if valid[i] and int((valid & (keys == keys[i])).sum()) <= cap:
+            assert i in emitted
+
+
+def test_shuffle_drops_are_unbiased():
+    """With shuffle, overflow drops shouldn't all hit the tail indices."""
+    n, cap = 4096, 64
+    keys = np.zeros(n, dtype=np.int32)           # one hot group
+    (out,), mask = group_by_capacity(
+        jnp.asarray(keys), jnp.ones(n, bool), 1, cap,
+        [jnp.arange(n, dtype=jnp.int32)], shuffle=True)
+    kept = np.asarray(out)[0][np.asarray(mask)[0]]
+    assert kept.max() > n // 2, "shuffled keep-set must span the range"
+    assert kept.min() < n // 2
+
+
+def test_invalid_never_emitted():
+    keys = jnp.asarray(np.zeros(16, np.int32))
+    valid = jnp.asarray(np.zeros(16, bool))
+    (out,), mask = group_by_capacity(keys, valid, 2, 8,
+                                     [jnp.arange(16, dtype=jnp.int32)])
+    assert not np.asarray(mask).any()
+    assert (np.asarray(out) == -1).all()

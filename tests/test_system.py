@@ -1,0 +1,119 @@
+"""End-to-end behaviour tests for the PiPNN system (build -> query -> recall),
+determinism (Appendix A.8), and the downstream k-NN-graph task."""
+import numpy as np
+import pytest
+
+from repro.core import pipnn
+from repro.core.beam_search import beam_search_np, brute_force_knn, recall_at_k
+from repro.core.knn_graph import knn_graph_pipnn, knn_graph_recall
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(11)
+    return rng.standard_normal((4000, 24)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return PiPNNParams(
+        rbc=RBCParams(c_max=256, c_min=32, p_samp=0.02, fanout=(4, 2)),
+        leaf=LeafParams(k=2, leaf_chunk=8),
+        hash_bits=12,
+        l_max=64,
+        max_deg=32,
+        seed=3,
+    )
+
+
+@pytest.fixture(scope="module")
+def index(dataset, params):
+    return pipnn.build(dataset, params)
+
+
+def test_build_shapes_and_sanity(index, dataset, params):
+    n = dataset.shape[0]
+    assert index.graph.shape == (n, params.max_deg)
+    assert index.dists.shape == (n, params.max_deg)
+    v = index.graph >= 0
+    assert v.any(axis=1).all(), "every point needs at least one neighbor"
+    assert np.isfinite(index.dists[v]).all()
+    # no self loops
+    rows = np.broadcast_to(np.arange(n)[:, None], index.graph.shape)
+    assert (index.graph[v] != rows[v]).all()
+    assert 0 <= index.start < n
+
+
+def test_recall_meets_bar(index, dataset):
+    """10@10 recall (the paper's metric) on held-in queries, modest beam."""
+    q = dataset[:200]
+    truth = brute_force_knn(dataset, q, 11)
+    t = np.array([row[row != i][:10] for i, row in enumerate(truth)])
+    found = pipnn.search(index, dataset, q, k=11, beam=64)
+    f = np.array([row[row != i][:10] for i, row in enumerate(found)])
+    r = recall_at_k(f, t, 10)
+    assert r > 0.9, f"recall {r}"
+
+
+def test_deterministic_rebuild(dataset, params, index):
+    """Appendix A.8: fixed seed => bit-identical index."""
+    again = pipnn.build(dataset, params)
+    np.testing.assert_array_equal(index.graph, again.graph)
+    np.testing.assert_array_equal(index.dists, again.dists)
+    assert index.start == again.start
+
+
+def test_replicas_add_quality(dataset, params):
+    """Extra replica (Sec. 5.2) must not hurt candidate coverage."""
+    p1 = params.with_(rbc=params.rbc)
+    import dataclasses
+    p2 = params.with_(rbc=dataclasses.replace(params.rbc, replicas=2))
+    i1 = pipnn.build(dataset, p1)
+    i2 = pipnn.build(dataset, p2)
+    assert i2.stats["n_candidate_edges"] > i1.stats["n_candidate_edges"]
+    assert i2.average_degree() >= i1.average_degree() * 0.8
+
+
+def test_no_final_prune_variant(dataset, params):
+    idx = pipnn.build(dataset, params.with_(final_prune=False))
+    assert (idx.graph >= 0).any(axis=1).all()
+
+
+def test_mips_metric_build(dataset):
+    p = PiPNNParams(
+        rbc=RBCParams(c_max=256, c_min=32, fanout=(3,)),
+        leaf=LeafParams(k=2),
+        metric="mips", l_max=32, max_deg=16, seed=0,
+    )
+    idx = pipnn.build(dataset, p)
+    q = dataset[:50]
+    truth = brute_force_knn(dataset, q, 10, metric="mips")
+    found = pipnn.search(idx, dataset, q, k=10, beam=48)
+    r = recall_at_k(found, truth, 10)
+    assert r > 0.6, f"MIPS recall {r}"
+
+
+def test_knn_graph_task(dataset):
+    p = PiPNNParams(
+        rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+        leaf=LeafParams(k=3), l_max=64, max_deg=32, seed=0,
+    )
+    knn, timings = knn_graph_pipnn(dataset, k=10, beam=48, params=p)
+    assert knn.shape == (dataset.shape[0], 10)
+    r = knn_graph_recall(dataset, knn, k=10, sample=400)
+    assert r > 0.85, f"knn-graph recall {r}"
+    assert timings["total"] > 0
+
+
+def test_sequential_and_batch_search_agree(index, dataset):
+    q = dataset[:20]
+    f_batch = pipnn.search(index, dataset, q, k=10, beam=32, batch=True)
+    f_np = pipnn.search(index, dataset, q, k=10, beam=32, batch=False)
+    agree = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10
+        for a, b in zip(f_batch, f_np)
+    ])
+    assert agree > 0.8, f"batch/np agreement {agree}"
