@@ -5,8 +5,16 @@ The paper's headline: PiPNN builds 6-12x faster than Vamana/HNSW at equal
 quality.  Our incremental baselines are faithful numpy implementations of
 the same algorithms (beam-search construction), so the *ratio* reproduces
 the search-bottleneck argument even though absolute times are CPU-scale.
+
+Also measures the streaming device-resident build vs the O(E) flat oracle
+(wall time + peak candidate-edge bytes) and appends the rows to
+``BENCH_build.json`` at the repo root so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
+
+import json
+import pathlib
 
 from benchmarks.common import Row, dataset, graph_recall, ground_truth, timed
 from repro.core import pipnn
@@ -28,14 +36,51 @@ def _pipnn_params(replicas: int = 1) -> PiPNNParams:
         seed=0)
 
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_build.json"
+
+
+def _dump_json(records: list[dict]) -> None:
+    """Append this run's records to BENCH_build.json (list of run dicts)."""
+    history = []
+    if BENCH_JSON.exists():
+        try:
+            history = json.loads(BENCH_JSON.read_text())
+        except (json.JSONDecodeError, OSError):
+            history = []
+        if not isinstance(history, list):
+            history = []
+    history.append({"n": N, "d": D, "max_deg": MAX_DEG, "records": records})
+    BENCH_JSON.write_text(json.dumps(history, indent=1))
+
+
 def run() -> list[Row]:
     x, q = dataset(N, D)
     truth = ground_truth(N, D)
     rows: list[Row] = []
     results = {}
+    records: list[dict] = []
 
+    # streaming (device-resident, bounded memory) vs flat (O(E) oracle);
+    # the flat build's graph is bit-identical (asserted by tests/check.sh)
+    # so it gets a memory/time record only, not a redundant recall pass
     idx, t_pipnn = timed(pipnn.build, x, _pipnn_params())
     results["pipnn_1rep"] = (idx.graph, idx.start, t_pipnn)
+    idx_f, t_flat = timed(pipnn.build, x, _pipnn_params(), streaming=False)
+    for name, i, t in (("streaming", idx, t_pipnn), ("flat", idx_f, t_flat)):
+        rows.append((
+            f"build/pipnn_memory_{name}",
+            i.stats["peak_edge_bytes"],
+            f"peak_candidate_edge_bytes={i.stats['peak_edge_bytes']} "
+            f"n_candidate_edges={i.stats['n_candidate_edges']} "
+            f"wall_s={t:.3f}",
+        ))
+        records.append({
+            "variant": name, "wall_s": t,
+            "peak_edge_bytes": int(i.stats["peak_edge_bytes"]),
+            "n_candidate_edges": int(i.stats["n_candidate_edges"]),
+            "timings": {k: float(v) for k, v in i.timings.items()},
+        })
+
     idx2, t_pipnn2 = timed(pipnn.build, x, _pipnn_params(replicas=2))
     results["pipnn_2rep"] = (idx2.graph, idx2.start, t_pipnn2)
 
@@ -60,4 +105,6 @@ def run() -> list[Row]:
         rows.append((f"build/{name}", secs * 1e6,
                      f"recall={r:.3f} speedup_vs_vamana={speedup:.2f}x "
                      f"deg={float((graph >= 0).sum(1).mean()):.1f}"))
+        records.append({"variant": name, "wall_s": secs, "recall": r})
+    _dump_json(records)
     return rows

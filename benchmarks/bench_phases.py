@@ -1,5 +1,7 @@
 """Fig. 4: fraction of build time in Partition / Build-Leaves / HashPrune /
-Final-Prune, from the orchestrator's own timers."""
+Final-Prune, from the orchestrator's own timers — for BOTH Stage-2+3
+strategies (streaming device-resident pipeline vs the O(E) flat oracle),
+plus the peak candidate-edge bytes each one holds."""
 from __future__ import annotations
 
 from benchmarks.common import Row, dataset
@@ -10,16 +12,21 @@ from repro.core.rbc import RBCParams
 
 N, D = 8192, 32
 
+PHASES = ("partition", "build_leaves", "hashprune", "final_prune")
+
 
 def run() -> list[Row]:
     x, _ = dataset(N, D)
     p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
                     leaf=LeafParams(k=2), max_deg=32, seed=0)
-    idx = pipnn.build(x, p)
-    total = idx.timings["total"]
     rows: list[Row] = []
-    for phase in ("partition", "build_leaves", "hashprune", "final_prune"):
-        t = idx.timings[phase]
-        rows.append((f"phases/{phase}", t * 1e6,
-                     f"share={t / total:.3f}"))
+    for label, streaming in (("streaming", True), ("flat", False)):
+        idx = pipnn.build(x, p, streaming=streaming)
+        total = idx.timings["total"]
+        for phase in PHASES:
+            t = idx.timings[phase]
+            rows.append((f"phases/{label}/{phase}", t * 1e6,
+                         f"share={t / total:.3f}"))
+        rows.append((f"phases/{label}/total", total * 1e6,
+                     f"peak_edge_bytes={idx.stats['peak_edge_bytes']}"))
     return rows

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Tier-1 gate + streaming/flat equivalence smoke build.
+#
+# Usage: scripts/check.sh            (from the repo root)
+#
+# 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
+# 2. runs a ~30 s smoke build (n=2000, d=32) through BOTH the streaming
+#    device-resident path and the O(E) flat oracle path and asserts the
+#    produced graphs are bit-identical, with streaming peak candidate-edge
+#    memory bounded by the chunk size.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: streaming vs flat build (n=2000, d=32) =="
+python - <<'EOF'
+import numpy as np
+
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+for metric in ("l2", "mips"):
+    p = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3,)),
+                    leaf=LeafParams(k=2, leaf_chunk=8, stream_chunk=8),
+                    l_max=32, max_deg=16, metric=metric, seed=1)
+    i_s = pipnn.build(x, p, streaming=True)
+    i_f = pipnn.build(x, p, streaming=False)
+    np.testing.assert_array_equal(i_s.graph, i_f.graph)
+    np.testing.assert_array_equal(i_s.dists, i_f.dists)
+    bound = 2 * 8 * p.rbc.c_max * p.leaf.k * 16
+    assert i_s.stats["peak_edge_bytes"] == bound, i_s.stats
+    assert i_s.stats["peak_edge_bytes"] < i_f.stats["peak_edge_bytes"]
+    print(f"  {metric}: identical graphs; "
+          f"peak bytes streaming={i_s.stats['peak_edge_bytes']} "
+          f"flat={i_f.stats['peak_edge_bytes']}")
+print("smoke OK")
+EOF
+
+echo "ALL CHECKS PASSED"

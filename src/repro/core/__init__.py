@@ -4,6 +4,7 @@ from repro.core.hashprune import (
     hashprune_batch,
     hashprune_flat,
     hashprune_merge,
+    hashprune_merge_flat,
     hashprune_stream,
     reservoir_init,
 )
@@ -13,7 +14,7 @@ from repro.core.rbc import RBCParams, ball_carve, leaves_to_padded, partition
 
 __all__ = [
     "Reservoir", "hashprune_batch", "hashprune_flat", "hashprune_merge",
-    "hashprune_stream", "reservoir_init", "EdgeList", "LeafParams",
-    "build_leaf_edges", "PiPNNIndex", "PiPNNParams", "build", "search",
-    "RBCParams", "ball_carve", "leaves_to_padded", "partition",
+    "hashprune_merge_flat", "hashprune_stream", "reservoir_init", "EdgeList",
+    "LeafParams", "build_leaf_edges", "PiPNNIndex", "PiPNNParams", "build",
+    "search", "RBCParams", "ball_carve", "leaves_to_padded", "partition",
 ]

@@ -23,7 +23,11 @@ Two consequences we rely on (and property-test):
       the l_max nearest bucket-minima of C1 can never re-enter after more
       candidates arrive.  This licenses bounded-memory streaming of
       *batches* (one leaf / one shard at a time) while holding only the
-      [n, l_max] reservoir — the distributed build path.
+      [n, l_max] reservoir.  ``hashprune_merge_flat`` is the workhorse
+      entry point: it folds a flat candidate-edge chunk into an existing
+      reservoir (with buffer donation, so the [n, l_max] state never
+      reallocates) and is what both the streaming ``pipnn.build`` default
+      path and the distributed tile step use.
 
 Tie-breaking: the paper implicitly assumes general position (distinct
 distances).  We make determinism unconditional by ordering candidates by the
@@ -187,6 +191,76 @@ def hashprune_flat(
     ids = out.ids.at[row, col].set(f_dst, mode="drop")
     hs = out.hashes.at[row, col].set(f_hash, mode="drop")
     ds = out.dists.at[row, col].set(f_dist, mode="drop")
+    return Reservoir(ids=ids, hashes=hs, dists=ds)
+
+
+def reservoir_as_edges(
+    ids: jax.Array, hashes: jax.Array, dists: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Flatten a reservoir [n, l_max] back into a flat edge list.
+
+    Empty slots become padding edges (src == n) in the ``hashprune_flat``
+    convention, so the result can be concatenated with a fresh candidate
+    chunk and re-pruned — the mergeability lemma's R(C1) ∪ C2.
+    """
+    n, l_max = ids.shape
+    row = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[:, None], (n, l_max)
+    ).reshape(-1)
+    flat_ids = ids.reshape(-1)
+    empty = flat_ids == INVALID_ID
+    src = jnp.where(empty, jnp.int32(n), row)
+    return src, flat_ids, hashes.reshape(-1), dists.reshape(-1)
+
+
+def merge_flat_edges(res_ids, res_hashes, res_dists,
+                     src, dst, hashes, dists) -> Reservoir:
+    """Traceable body of ``hashprune_merge_flat`` (no jit, no donation).
+
+    Call this form when fusing the merge into a larger jitted step — the
+    streaming ``pipnn.build`` chunk step and the distributed tile step both
+    inline it so leaf k-NN, edge emission, hashing and the reservoir fold
+    compile into one program.
+    """
+    n, l_max = res_ids.shape
+    r_src, r_dst, r_h, r_d = reservoir_as_edges(res_ids, res_hashes, res_dists)
+    return hashprune_flat(
+        jnp.concatenate([r_src, src]),
+        jnp.concatenate([r_dst, dst]),
+        jnp.concatenate([r_h, hashes]),
+        jnp.concatenate([r_d, dists]),
+        n_points=n, l_max=l_max,
+    )
+
+
+# Buffer donation lets XLA reuse the old reservoir's [n, l_max] buffers for
+# the new one, so the persistent state never reallocates across chunks.
+# (On backends without donation support this silently degrades to a copy.)
+_merge_flat_jit = jax.jit(merge_flat_edges, donate_argnums=(0, 1, 2))
+
+
+def hashprune_merge_flat(
+    res: Reservoir,
+    src: jax.Array,
+    dst: jax.Array,
+    hashes: jax.Array,
+    dists: jax.Array,
+) -> Reservoir:
+    """Fold a flat candidate-edge chunk into an existing reservoir.
+
+    Equivalent (bit-identical, not just set-equal) to running
+    ``hashprune_flat`` once over every edge ever folded in, by the
+    mergeability lemma: the reservoir is re-expressed as a flat edge list
+    and re-pruned together with the chunk in one global sort.  Peak
+    intermediate memory is O(n*l_max + len(src)) — independent of the
+    total number of candidate edges.
+
+    ``res`` is DONATED: do not reuse it after the call.  Padding edges use
+    the ``hashprune_flat`` convention (src == n, dst == INVALID_ID,
+    dist == +inf).
+    """
+    ids, hs, ds = _merge_flat_jit(res.ids, res.hashes, res.dists,
+                                  src, dst, hashes, dists)
     return Reservoir(ids=ids, hashes=hs, dists=ds)
 
 

@@ -17,7 +17,11 @@ Methods (A.3 ablation space):
   * ``robust_prune``     — all-to-all RobustPrune per leaf point.
 
 All methods emit a flat candidate edge list (src, dst, dist) ready for
-``hashprune_flat``.
+``hashprune_flat``.  The k-NN methods additionally have a device-side
+emitter (``emit_knn_edges_jax``) that the default streaming build fuses
+with the HashPrune merge so candidate edges never land on the host; the
+host-side ``build_leaf_edges``/``EdgeList`` path remains the oracle for the
+``mst`` / ``robust_prune`` methods and the flat build.
 """
 from __future__ import annotations
 
@@ -45,6 +49,11 @@ class LeafParams:
     mst_degree_cap: int = 3
     mst_sparsify: int = 10     # l-NN sparsification before Kruskal (A.3.1)
     leaf_chunk: int = 8        # leaves per batched GEMM launch (VMEM budget)
+    stream_chunk: int | None = None  # leaves per streaming merge step; None =
+    #                            auto-size so one chunk's candidate edges are
+    #                            ~ the [n, l_max] reservoir (merge cost then
+    #                            amortizes to O(E / (n*l_max)) global sorts
+    #                            while peak memory stays reservoir-bounded)
 
 
 @dataclasses.dataclass
@@ -64,6 +73,22 @@ class EdgeList:
             dst=np.concatenate([self.dst, other.dst]),
             dist=np.concatenate([self.dist, other.dist]),
         )
+
+
+def iter_leaf_id_chunks(leaves_padded: np.ndarray, chunk: int):
+    """Yield fixed-shape [chunk, c_max] int32 blocks of ``leaves_padded``.
+
+    The last block is -1-padded to a full chunk so every block has the same
+    static shape (one jit compilation for the whole stream).
+    """
+    nleaves, c = leaves_padded.shape
+    chunk = max(1, chunk)
+    for s in range(0, nleaves, chunk):
+        ids = leaves_padded[s : s + chunk]
+        if ids.shape[0] < chunk:
+            pad = np.full((chunk - ids.shape[0], c), -1, dtype=np.int32)
+            ids = np.concatenate([ids, pad], axis=0)
+        yield ids
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +145,37 @@ def _emit_knn_edges(
     if direction == "inverted":
         return rev
     return fwd.concat(rev)  # bidirected
+
+
+def emit_knn_edges_jax(
+    leaf_ids: jax.Array,   # [B, C] global ids (-1 pad)
+    nbr_idx: jax.Array,    # [B, C, k] in-leaf indices (-1 pad)
+    nbr_dist: jax.Array,   # [B, C, k]
+    *,
+    direction: str,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side ``_emit_knn_edges``: flat (src, dst, dist) arrays.
+
+    Fixed output shape [B*C*k] (or [2*B*C*k] bidirected); invalid slots are
+    (-1, -1, +inf).  Traceable — the streaming build fuses this into the
+    per-chunk jitted step so candidate edges never bounce through the host.
+    """
+    b, c, k = nbr_idx.shape
+    rows = jnp.broadcast_to(leaf_ids[:, :, None], (b, c, k))
+    safe = jnp.maximum(nbr_idx, 0)
+    cols = jnp.take_along_axis(
+        jnp.broadcast_to(leaf_ids[:, None, :], (b, c, c)), safe, axis=2
+    )
+    ok = (nbr_idx >= 0) & (rows >= 0) & (rows != cols)  # no self loops
+    src = jnp.where(ok, rows, -1).reshape(-1).astype(jnp.int32)
+    dst = jnp.where(ok, cols, -1).reshape(-1).astype(jnp.int32)
+    dist = jnp.where(ok, nbr_dist, jnp.inf).reshape(-1).astype(jnp.float32)
+    if direction == "directed":
+        return src, dst, dist
+    if direction == "inverted":
+        return dst, src, dist
+    return (jnp.concatenate([src, dst]), jnp.concatenate([dst, src]),
+            jnp.concatenate([dist, dist]))  # bidirected
 
 
 def _mst_edges(leaf_ids: np.ndarray, d: np.ndarray, valid: np.ndarray,
@@ -198,19 +254,10 @@ def build_leaf_edges(
     inner kernel — the Pallas FlashKNN kernel plugs in here.
     """
     xj = jnp.asarray(x)
-    nleaves, c = leaves_padded.shape
-    out = EdgeList(
-        np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0, np.float32)
-    )
-    chunk = max(1, params.leaf_chunk)
     knn = knn_fn or (lambda pts, valid: leaf_knn_jax(
         pts, valid, k=params.k, metric=params.metric))
     pieces: list[EdgeList] = []
-    for s in range(0, nleaves, chunk):
-        ids = leaves_padded[s : s + chunk]
-        if ids.shape[0] < chunk:  # keep shapes static for the jit cache
-            pad = np.full((chunk - ids.shape[0], c), -1, dtype=np.int32)
-            ids = np.concatenate([ids, pad], axis=0)
+    for ids in iter_leaf_id_chunks(leaves_padded, params.leaf_chunk):
         valid = ids >= 0
         pts = xj[jnp.maximum(jnp.asarray(ids), 0)]
         vj = jnp.asarray(valid)
@@ -242,6 +289,13 @@ def build_leaf_edges(
             ))
         else:
             raise ValueError(f"unknown leaf method {params.method!r}")
-    for p in pieces:
-        out = out.concat(p)
-    return out
+    # One concatenate per field: the previous per-piece ``EdgeList.concat``
+    # loop re-copied the accumulated prefix every iteration (O(E^2) bytes).
+    if not pieces:
+        return EdgeList(np.empty(0, np.int32), np.empty(0, np.int32),
+                        np.empty(0, np.float32))
+    return EdgeList(
+        src=np.concatenate([p.src for p in pieces]),
+        dst=np.concatenate([p.dst for p in pieces]),
+        dist=np.concatenate([p.dist for p in pieces]),
+    )

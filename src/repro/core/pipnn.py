@@ -4,6 +4,33 @@ This is the host-orchestrated reference/build path used by tests, examples
 and benchmarks; the fully-static multi-pod SPMD build lives in
 ``repro/launch/build_index.py`` and reuses the same stage functions.
 
+Two Stage-2+3 execution strategies, selected by ``build(..., streaming=)``:
+
+  * STREAMING (default, ``streaming=True``): a device-resident chunk
+    pipeline.  For each chunk of leaves one fused jitted step runs the leaf
+    k-NN kernel, emits candidate edges as fixed-shape device arrays
+    (``leaf.emit_knn_edges_jax``), computes residual hashes from the
+    precomputed sketches (Pallas ``edge_hashes`` on TPU,
+    ``hash_from_sketches`` fallback elsewhere), and folds the chunk into
+    the persistent [n, l_max] reservoir via ``hashprune_merge_flat`` with
+    buffer donation.  The merge chunk (``LeafParams.stream_chunk``)
+    auto-sizes so one chunk's edge buffer is ~ the reservoir itself, which
+    amortizes the merge's global re-sort to O(E / (n * l_max)) passes;
+    the k-NN GEMM still runs at the ``leaf_chunk`` VMEM granularity inside
+    the fused step.  Peak intermediate memory is
+    O(stream_chunk * c_max * k + n * l_max) = O(n * l_max) in auto mode,
+    and there are no host round-trips inside the loop — candidate edges
+    never materialize on the host.
+
+  * FLAT (``streaming=False``, and the fallback for the ``mst`` /
+    ``robust_prune`` leaf methods): materialize the whole candidate edge
+    list on the host, then run one global ``hashprune_flat`` sort.  O(E)
+    memory; kept as the oracle the streaming path is property-tested
+    against (mergeability lemma, hashprune.py).
+
+Both paths are bit-identical by HashPrune's mergeability (Theorem 3.1):
+tests assert equal graphs on both metrics.
+
 The build is deterministic under a fixed seed (Appendix A.8): RBC is
 deterministic given its RNG stream, and HashPrune is history-independent
 (Theorem 3.1), so the produced graph is unique regardless of leaf processing
@@ -19,17 +46,25 @@ standard DiskANN-MIPS practice.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as _sketch
-from repro.core.hashprune import Reservoir, hashprune_flat, INVALID_ID
-from repro.core.leaf import EdgeList, LeafParams, build_leaf_edges
+from repro.core.hashprune import (INVALID_ID, Reservoir, hashprune_flat,
+                                  merge_flat_edges, reservoir_init)
+from repro.core.leaf import (EdgeList, LeafParams, build_leaf_edges,
+                             emit_knn_edges_jax, iter_leaf_id_chunks,
+                             leaf_knn_jax)
 from repro.core.rbc import RBCParams, leaves_to_padded, partition
 from repro.core.robust_prune import final_prune
+
+_KNN_METHODS = ("bidirected", "directed", "inverted")
+_EDGE_BYTES = 16  # src + dst + hash (int32) + dist (f32) per candidate edge
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +79,7 @@ class PiPNNParams:
     max_deg: int = 64          # final graph degree cap (paper's comparison deg)
     metric: str = "l2"
     seed: int = 0
+    use_pallas_hash: bool | None = None  # None: auto (Pallas on TPU only)
 
     def effective_alpha(self) -> float:
         if self.metric == "l2":
@@ -73,18 +109,139 @@ class PiPNNIndex:
         return float((self.graph >= 0).sum() / self.graph.shape[0])
 
 
+def _resolve_pallas(params: PiPNNParams) -> tuple[bool, bool]:
+    """(use_pallas, interpret) for the residual-hash kernel."""
+    on_tpu = jax.default_backend() == "tpu"
+    use = on_tpu if params.use_pallas_hash is None else bool(params.use_pallas_hash)
+    return use, not on_tpu
+
+
 def _hash_edges(
-    edges: EdgeList, sketches: np.ndarray
+    edges: EdgeList, sketches: np.ndarray, *,
+    use_pallas: bool = False, interpret: bool = True,
 ) -> np.ndarray:
     """Residual hashes h_src(dst) for every candidate edge, via sketches."""
-    safe_src = np.maximum(edges.src, 0)
-    safe_dst = np.maximum(edges.dst, 0)
-    h = np.asarray(
-        _sketch.hash_from_sketches(
-            jnp.asarray(sketches[safe_dst]), jnp.asarray(sketches[safe_src])
-        )
+    h = _sketch.edge_hashes_from_ids(
+        jnp.asarray(sketches), jnp.asarray(edges.src), jnp.asarray(edges.dst),
+        use_pallas=use_pallas, interpret=interpret,
     )
-    return h.astype(np.int32)
+    return np.asarray(h).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Streaming Stage 2+3: fused leaf-kNN -> edge emit -> edge hash -> merge
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _make_stream_step(
+    knn_fn: Callable | None,
+    k: int,
+    metric: str,
+    direction: str,
+    use_pallas: bool,
+    interpret: bool,
+    sub_chunk: int,
+):
+    """Compile the per-chunk fused step.
+
+    step(res_ids, res_hashes, res_dists, xj, sketches, ids_chunk)
+      -> (res_ids', res_hashes', res_dists', n_valid_edges)
+
+    ``ids_chunk`` is [stream_chunk, c_max]; the leaf k-NN runs over
+    ``sub_chunk``-sized sub-batches (the VMEM-budget GEMM granularity,
+    unrolled in the trace) while edge emission, hashing and the reservoir
+    fold happen once per chunk — so the expensive [n, l_max] re-sort is
+    amortized over many leaves.  The reservoir triplet is donated so the
+    persistent state is updated in place across the whole stream.  Cached
+    on (knn_fn identity, statics) so repeated builds reuse one executable.
+    """
+    knn = knn_fn or (lambda pts, valid: leaf_knn_jax(
+        pts, valid, k=k, metric=metric))
+
+    def step(res_ids, res_hashes, res_dists, xj, sketches, ids_chunk):
+        n = res_ids.shape[0]
+        s, c = ids_chunk.shape
+
+        def block(ids_sub):  # [sub_chunk, c_max] -> flat edge arrays
+            pts = xj[jnp.maximum(ids_sub, 0)]
+            ni, nd = knn(pts, ids_sub >= 0)
+            return emit_knn_edges_jax(ids_sub, ni, nd, direction=direction)
+
+        # lax.map (not an unrolled python loop): program size stays constant
+        # however large the auto-sized stream chunk grows, and the [C, C]
+        # working set stays at the sub_chunk VMEM granularity
+        src, dst, dist = jax.lax.map(
+            block, ids_chunk.reshape(s // sub_chunk, sub_chunk, c))
+        src, dst, dist = src.reshape(-1), dst.reshape(-1), dist.reshape(-1)
+        h = _sketch.edge_hashes_from_ids(
+            sketches, src, dst, use_pallas=use_pallas, interpret=interpret)
+        ok = src >= 0
+        merged = merge_flat_edges(
+            res_ids, res_hashes, res_dists,
+            jnp.where(ok, src, jnp.int32(n)),
+            jnp.where(ok, dst, INVALID_ID),
+            jnp.where(ok, h, 0),
+            jnp.where(ok, dist, jnp.inf),
+        )
+        return (merged.ids, merged.hashes, merged.dists,
+                jnp.sum(ok, dtype=jnp.int32))
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+def _stream_chunk_leaves(
+    leaf: LeafParams, n: int, l_max: int, nleaves: int, c_max: int
+) -> int:
+    """Leaves per streaming merge step (a multiple of ``leaf_chunk``).
+
+    Auto mode sizes the chunk so one chunk's padded candidate-edge buffer
+    is ~ the reservoir ([n, l_max] entries): the merge's global re-sort
+    then costs O(E / (n * l_max)) passes total while peak intermediate
+    memory stays O(n * l_max) — the paper's "no extra intermediate
+    memory" contract — instead of O(E).
+    """
+    lc = max(1, leaf.leaf_chunk)
+    if leaf.stream_chunk is not None:
+        s = max(lc, int(leaf.stream_chunk))
+    else:
+        fan = 2 if leaf.method == "bidirected" else 1
+        edges_per_leaf = max(1, c_max * leaf.k * fan)
+        s = max(lc, (n * l_max) // edges_per_leaf)
+    s = min(s, max(lc, nleaves))          # never over-allocate past the data
+    return -(-s // lc) * lc               # round up to a leaf_chunk multiple
+
+
+def _build_reservoir_streaming(
+    x: np.ndarray,
+    leaves_padded: np.ndarray,
+    sketches: jax.Array,
+    params: PiPNNParams,
+    knn_fn: Callable | None,
+) -> tuple[Reservoir, int, dict[str, int]]:
+    """Stream leaf chunks through the fused step; returns
+    (reservoir, n_candidate_edges, memory stats)."""
+    leaf = params.leaf
+    use_pallas, interpret = _resolve_pallas(params)
+    n = x.shape[0]
+    nleaves, c_max = leaves_padded.shape
+    chunk = _stream_chunk_leaves(leaf, n, params.l_max, nleaves, c_max)
+    step = _make_stream_step(knn_fn, leaf.k, params.metric, leaf.method,
+                             use_pallas, interpret, max(1, leaf.leaf_chunk))
+    xj = jnp.asarray(x)
+    res = reservoir_init(n, params.l_max)
+    ids_r, hs_r, ds_r = res.ids, res.hashes, res.dists
+    counts = []
+    for ids in iter_leaf_id_chunks(leaves_padded, chunk):
+        ids_r, hs_r, ds_r, cnt = step(ids_r, hs_r, ds_r, xj, sketches,
+                                      jnp.asarray(ids))
+        counts.append(cnt)  # device scalar: no per-chunk host sync
+    fan = 2 if leaf.method == "bidirected" else 1
+    mem = {
+        "stream_chunk_leaves": chunk,
+        "peak_edge_bytes": fan * chunk * c_max * leaf.k * _EDGE_BYTES,
+    }
+    n_edges = int(np.sum([np.asarray(c) for c in counts])) if counts else 0
+    return Reservoir(ids=ids_r, hashes=hs_r, dists=ds_r), n_edges, mem
 
 
 def build(
@@ -93,8 +250,21 @@ def build(
     *,
     leaves: list[np.ndarray] | None = None,
     knn_fn: Callable | None = None,
+    streaming: bool = True,
 ) -> PiPNNIndex:
-    """Build a PiPNN index over ``x`` [n, d] float32."""
+    """Build a PiPNN index over ``x`` [n, d] float32.
+
+    ``streaming=True`` (default) runs Stage 2+3 as the device-resident
+    chunk pipeline (bounded memory, no host round-trips); ``False`` forces
+    the O(E) flat oracle path.  Both produce bit-identical graphs.
+
+    ``knn_fn``, if given, should be a STABLE callable (e.g. the cached
+    ``kernels.ops.make_knn_fn``): the streaming fused step is compiled per
+    knn_fn identity, so a fresh lambda per call recompiles every build.
+    Under ``streaming=True`` it must also be jit-traceable (pure JAX —
+    it runs inside the fused step); pass ``streaming=False`` for a
+    host-side/numpy knn_fn.
+    """
     from repro.core.beam_search import medoid  # local import, avoids cycle
 
     params = params or PiPNNParams()
@@ -116,29 +286,53 @@ def build(
     stats["point_repeat"] = float(sizes.sum() / max(n, 1))
     stats["pad_ratio"] = float(padded.size / max(sizes.sum(), 1))
 
-    # --- Stage 2: leaf building -> candidate edges (Sec. 4.2) -------------
-    t0 = time.perf_counter()
-    leaf = dataclasses.replace(params.leaf, metric=params.metric)
-    edges = build_leaf_edges(x, padded, leaf, knn_fn=knn_fn)
-    timings["build_leaves"] = time.perf_counter() - t0
-    stats["n_candidate_edges"] = int(edges.valid().sum())
-
-    # --- Stage 3: HashPrune (Sec. 3) ---------------------------------------
-    t0 = time.perf_counter()
     import jax.random as jrandom
 
     key = jrandom.PRNGKey(params.seed)
     hyperplanes = _sketch.make_hyperplanes(key, params.hash_bits, d)
-    sketches = np.asarray(_sketch.sketch_jit(jnp.asarray(x), hyperplanes))
-    hashes = _hash_edges(edges, sketches)
-    src = np.where(edges.src >= 0, edges.src, n).astype(np.int32)
-    dst = np.where(edges.src >= 0, edges.dst, INVALID_ID).astype(np.int32)
-    dist = np.where(edges.src >= 0, edges.dist, np.inf).astype(np.float32)
-    res: Reservoir = hashprune_flat(
-        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
-        jnp.asarray(dist), n_points=n, l_max=params.l_max,
-    )
-    timings["hashprune"] = time.perf_counter() - t0
+    leaf = dataclasses.replace(params.leaf, metric=params.metric)
+    lparams = dataclasses.replace(params, leaf=leaf)
+
+    stream_ok = streaming and leaf.method in _KNN_METHODS
+    stats["streaming"] = stream_ok
+
+    if stream_ok:
+        # --- Stage 2+3 fused: streaming device-resident pipeline ----------
+        # one fused loop: the (tiny) sketch GEMM is charged to the
+        # hashprune phase, everything else to build_leaves
+        t0 = time.perf_counter()
+        sketches = jax.block_until_ready(
+            _sketch.sketch_jit(jnp.asarray(x), hyperplanes))
+        timings["hashprune"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res, n_edges, mem = _build_reservoir_streaming(
+            x, padded, sketches, lparams, knn_fn)
+        jax.block_until_ready(res.ids)
+        timings["build_leaves"] = time.perf_counter() - t0
+        stats["n_candidate_edges"] = n_edges
+        stats.update(mem)
+    else:
+        # --- Stage 2: leaf building -> candidate edges (Sec. 4.2) ---------
+        t0 = time.perf_counter()
+        edges = build_leaf_edges(x, padded, leaf, knn_fn=knn_fn)
+        timings["build_leaves"] = time.perf_counter() - t0
+        stats["n_candidate_edges"] = int(edges.valid().sum())
+        stats["peak_edge_bytes"] = int(edges.src.size) * _EDGE_BYTES
+
+        # --- Stage 3: HashPrune (Sec. 3) ----------------------------------
+        t0 = time.perf_counter()
+        use_pallas, interpret = _resolve_pallas(params)
+        sketches = np.asarray(_sketch.sketch_jit(jnp.asarray(x), hyperplanes))
+        hashes = _hash_edges(edges, sketches, use_pallas=use_pallas,
+                             interpret=interpret)
+        src = np.where(edges.src >= 0, edges.src, n).astype(np.int32)
+        dst = np.where(edges.src >= 0, edges.dst, INVALID_ID).astype(np.int32)
+        dist = np.where(edges.src >= 0, edges.dist, np.inf).astype(np.float32)
+        res = hashprune_flat(
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
+            jnp.asarray(dist), n_points=n, l_max=params.l_max,
+        )
+        timings["hashprune"] = time.perf_counter() - t0
 
     # --- Stage 4: final prune (Sec. 4.3) -----------------------------------
     t0 = time.perf_counter()

@@ -56,6 +56,31 @@ def sketch_jit(x: jax.Array, hyperplanes: jax.Array) -> jax.Array:
     return sketch(x, hyperplanes)
 
 
+def edge_hashes_from_ids(
+    sketches: jax.Array,   # [n, m] precomputed point sketches
+    src: jax.Array,        # [E] int32 edge sources (may contain -1 padding)
+    dst: jax.Array,        # [E] int32 edge destinations
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Residual hashes h_src(dst) [E] int32 for a flat edge list.
+
+    Gathers the two sketch rows per edge and packs the sign bits, either
+    through the fused Pallas kernel (``use_pallas=True``; ``interpret``
+    selects the CPU fallback executor) or the pure-jnp
+    ``hash_from_sketches``.  Both produce identical int32 hashes.
+    Traceable: the streaming build calls this inside its fused chunk step.
+    """
+    s_sk = sketches[jnp.maximum(src, 0)]
+    d_sk = sketches[jnp.maximum(dst, 0)]
+    if use_pallas:
+        from repro.kernels.edge_hash import edge_hashes  # no core->kernels cycle
+
+        return edge_hashes(s_sk, d_sk, interpret=interpret)
+    return hash_from_sketches(d_sk, s_sk)
+
+
 def collision_probability(theta: jax.Array, m: int) -> jax.Array:
     """P[h_p(c) = h_p(c')] = (1 - theta/pi)^m for residual angle theta.
 

@@ -1,0 +1,19 @@
+"""Version shims for jax APIs that moved between 0.4.x and 0.6+.
+
+``shard_map``: promoted from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``).  Import
+``shard_map_norep`` from here instead of duplicating the probe; drop this
+module when the floor is jax >= 0.6.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    shard_map_norep = functools.partial(jax.shard_map, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+
+    shard_map_norep = functools.partial(_sm, check_rep=False)

@@ -9,6 +9,11 @@ in one VPU pass: subtract, threshold, weighted-sum with powers of two.
 Edges are viewed as [rows, 128] so tiles are lane-aligned; m <= 16 bits pack
 into an int32 (stored alongside the 8-byte reservoir slot layout the paper
 describes).
+
+Wired into both PiPNN build paths via ``sketch.edge_hashes_from_ids``: the
+streaming build fuses it into the per-chunk jitted step, the flat path uses
+it when ``PiPNNParams.use_pallas_hash`` is set (auto-on on TPU, with the
+pure-jnp ``hash_from_sketches`` as the interpret-mode fallback).
 """
 from __future__ import annotations
 
@@ -38,6 +43,11 @@ def edge_hashes(
 ) -> jax.Array:
     """Packed residual hashes [E] int32."""
     e, m = src_sketch.shape
+    if m > 16:
+        raise ValueError(f"m={m} hash bits do not pack into the paper's "
+                         "16-bit reservoir slot")
+    if e == 0:
+        return jnp.zeros((0,), jnp.int32)
     pad = (-e) % LANE
     if pad:
         src_sketch = jnp.pad(src_sketch, ((0, pad), (0, 0)))

@@ -37,8 +37,15 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@functools.cache
 def make_knn_fn(k: int, metric: str = "l2", interpret: bool | None = None):
-    """FlashKNN as a drop-in for leaf.build_leaf_edges(knn_fn=...)."""
+    """FlashKNN as a drop-in for leaf.build_leaf_edges(knn_fn=...).
+
+    Cached on the arguments so repeated calls return the SAME callable:
+    the streaming build keys its compiled fused step on knn_fn identity,
+    so a stable callable means one compile per configuration instead of
+    one per build.
+    """
     interp = default_interpret() if interpret is None else interpret
 
     def knn(pts: jax.Array, valid: jax.Array):

@@ -42,12 +42,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import sketch as _sketch
-from repro.core.hashprune import (INVALID_ID, Reservoir, hashprune_flat,
-                                  hashprune_merge, reservoir_init)
+from repro.core.hashprune import (INVALID_ID, Reservoir, merge_flat_edges,
+                                  reservoir_init)
+from repro.distributed import compat as _compat
 from repro.core.robust_prune import robust_prune_mask
 from repro.distributed.routing import group_by_capacity
 
 INF = jnp.float32(jnp.inf)
+_shard_map = _compat.shard_map_norep
 
 
 # ---------------------------------------------------------------------------
@@ -330,13 +332,15 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
         m_src, m_dst, m_h, m_d = [
             x.reshape((S * dv["cap_edge"],) + x.shape[2:]) for x in r_edges]
 
-        # ---- 6. HashPrune (closed form) + merge ---------------------------
+        # ---- 6. HashPrune: fold flat edges straight into the reservoir ----
+        # same fused merge as the streaming host build (mergeability lemma):
+        # one global sort over reservoir-as-edges + chunk, no intermediate
+        # per-tile reservoir
         lsrc = jnp.where(r_ok, m_src - me * n_loc, n_loc)
-        tile_res = hashprune_flat(
+        merged = merge_flat_edges(
+            res_ids, res_hash, res_dist,
             lsrc, jnp.where(r_ok, m_dst, INVALID_ID), m_h,
-            jnp.where(r_ok, m_d, INF), n_points=n_loc, l_max=p.l_max)
-        merged = hashprune_merge(
-            Reservoir(res_ids, res_hash, res_dist), tile_res)
+            jnp.where(r_ok, m_d, INF))
         stats = jax.lax.psum(jnp.stack([
             jnp.sum(r_ok.astype(jnp.int32)),       # edges received
             jnp.sum(recv_valid.astype(jnp.int32)),  # replicas received
@@ -346,11 +350,10 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
 
     sharded = P(axes)
     rep = P()
-    step = jax.shard_map(
+    step = _shard_map(
         shard_body, mesh=mesh,
         in_specs=(sharded, rep, sharded, sharded, sharded),
         out_specs=(sharded, sharded, sharded, rep),
-        check_vma=False,
     )
 
     def tile_step(points, hyperplanes, res: Reservoir):
@@ -426,11 +429,10 @@ def make_final_prune_step(mesh: Mesh, p: DistBuildParams):
                 gd.reshape(n_loc, p.max_deg))
 
     sharded = P(axes)
-    return jax.shard_map(
+    return _shard_map(
         shard_body, mesh=mesh,
         in_specs=(sharded, sharded, sharded),
         out_specs=(sharded, sharded),
-        check_vma=False,
     )
 
 

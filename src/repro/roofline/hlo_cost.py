@@ -132,8 +132,12 @@ def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
         if not m:
             continue
         name, rtype, opcode, operands, attrs = m.groups()
-        ops = [o.strip().lstrip("%") for o in operands.split(",")]
-        ops = [o.split(" ")[-1].lstrip("%") for o in ops if o]
+        # operand entries may carry inline types ("f32[64,256]{1,0} %x") whose
+        # commas break a naive split; pull the %-prefixed names directly
+        ops = re.findall(r"%([\w.\-]+)", operands)
+        if not ops:  # older prints: no % prefix, maybe still inline-typed
+            ops = [o.strip().split(" ")[-1]
+                   for o in operands.split(",") if o.strip()]
         op = Op(name, rtype, opcode, ops, attrs)
         cur.ops.append(op)
         cur.types[name] = rtype

@@ -1,0 +1,33 @@
+"""Import hypothesis if available; otherwise provide stand-ins that mark
+property tests as skipped while leaving the rest of the module runnable.
+
+The container may lack hypothesis (see ROADMAP); a module-level
+``pytest.importorskip`` would throw away every non-property test in the
+module along with the property tests, so test modules import from here
+instead::
+
+    from _hypothesis_compat import hypothesis, st
+
+``hypothesis.given(...)`` then degrades to ``pytest.mark.skip`` and the
+``st.*`` strategy constructors to inert placeholders.
+"""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    class _Hypothesis:
+        def given(self, *a, **k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(self, *a, **k):
+            return lambda f: f
+
+    st = _Strategies()
+    hypothesis = _Hypothesis()
+    hypothesis.strategies = st

@@ -2,12 +2,11 @@
 beam search, and metrics."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import metrics as _metrics
 from repro.core.beam_search import (

@@ -4,11 +4,10 @@ The crown jewels: Theorem 3.1 (history independence / order-freedom) and the
 mergeability lemma, checked by hypothesis against the streaming Algorithm 3
 reference and the sort-based closed form.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.hashprune import (
     INVALID_ID,

@@ -1,11 +1,10 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracles,
 swept over shapes and dtypes, plus hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.kernels import ops, ref
 

@@ -9,14 +9,21 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.distributed import sharding as shd
 
 
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)          # jax >= 0.5
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x
+
+
 @pytest.fixture(scope="module")
 def mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def mp_mesh():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def leaf(shape):

@@ -2,7 +2,10 @@
 PiPNN build and the EP MoE dispatch)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import hypothesis, st
+
+given = hypothesis.given
+settings = hypothesis.settings
 
 import jax.numpy as jnp
 
