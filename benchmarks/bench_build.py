@@ -60,26 +60,41 @@ def run() -> list[Row]:
     results = {}
     records: list[dict] = []
 
-    # streaming (device-resident, bounded memory) vs flat (O(E) oracle);
-    # the flat build's graph is bit-identical (asserted by tests/check.sh)
-    # so it gets a memory/time record only, not a redundant recall pass
+    # streaming (device-resident, bounded memory; segmented merge default)
+    # vs the flat-merge fold (global re-sort per chunk) vs flat (O(E)
+    # oracle); all three graphs are bit-identical (asserted by tests /
+    # check.sh) so only the first gets a recall pass.  The segmented-vs-
+    # flat-merge wall delta is the regression signal for ROADMAP's
+    # "streaming 2-3x slower on CPU (reservoir re-sort)" item.
     idx, t_pipnn = timed(pipnn.build, x, _pipnn_params())
     results["pipnn_1rep"] = (idx.graph, idx.start, t_pipnn)
+    idx_m, t_flatmerge = timed(
+        pipnn.build, x, _pipnn_params().with_(merge="flat"))
     idx_f, t_flat = timed(pipnn.build, x, _pipnn_params(), streaming=False)
-    for name, i, t in (("streaming", idx, t_pipnn), ("flat", idx_f, t_flat)):
+    for name, i, t in (("streaming", idx, t_pipnn),
+                       ("streaming_flatmerge", idx_m, t_flatmerge),
+                       ("flat", idx_f, t_flat)):
         rows.append((
             f"build/pipnn_memory_{name}",
             i.stats["peak_edge_bytes"],
             f"peak_candidate_edge_bytes={i.stats['peak_edge_bytes']} "
+            f"merge_workspace_bytes={i.stats['merge_workspace_bytes']} "
             f"n_candidate_edges={i.stats['n_candidate_edges']} "
-            f"wall_s={t:.3f}",
+            f"wall_s={t:.3f} final_prune_s={i.timings['final_prune']:.3f}",
         ))
         records.append({
             "variant": name, "wall_s": t,
             "peak_edge_bytes": int(i.stats["peak_edge_bytes"]),
+            "edge_bytes_build_leaves": int(i.stats["edge_bytes_build_leaves"]),
+            "merge_workspace_bytes": int(i.stats["merge_workspace_bytes"]),
             "n_candidate_edges": int(i.stats["n_candidate_edges"]),
             "timings": {k: float(v) for k, v in i.timings.items()},
         })
+    records.append({
+        "variant": "merge_delta",
+        "segmented_vs_flatmerge_wall_s": t_pipnn - t_flatmerge,
+        "streaming_vs_flat_wall_s": t_pipnn - t_flat,
+    })
 
     idx2, t_pipnn2 = timed(pipnn.build, x, _pipnn_params(replicas=2))
     results["pipnn_2rep"] = (idx2.graph, idx2.start, t_pipnn2)

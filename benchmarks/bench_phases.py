@@ -1,7 +1,8 @@
 """Fig. 4: fraction of build time in Partition / Build-Leaves / HashPrune /
-Final-Prune, from the orchestrator's own timers — for BOTH Stage-2+3
-strategies (streaming device-resident pipeline vs the O(E) flat oracle),
-plus the peak candidate-edge bytes each one holds."""
+Final-Prune, from the orchestrator's own timers — for the streaming
+device-resident pipeline (segmented merge default), the flat-merge fold
+variant, and the O(E) flat oracle, plus each path's actual allocated
+candidate-edge / merge-workspace bytes (peak, per stage)."""
 from __future__ import annotations
 
 from benchmarks.common import Row, dataset
@@ -13,6 +14,8 @@ from repro.core.rbc import RBCParams
 N, D = 8192, 32
 
 PHASES = ("partition", "build_leaves", "hashprune", "final_prune")
+BYTE_STATS = ("peak_edge_bytes", "edge_bytes_build_leaves",
+              "merge_workspace_bytes")
 
 
 def run() -> list[Row]:
@@ -20,13 +23,18 @@ def run() -> list[Row]:
     p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
                     leaf=LeafParams(k=2), max_deg=32, seed=0)
     rows: list[Row] = []
-    for label, streaming in (("streaming", True), ("flat", False)):
-        idx = pipnn.build(x, p, streaming=streaming)
+    variants = (("streaming", p, True),
+                ("streaming_flatmerge", p.with_(merge="flat"), True),
+                ("flat", p, False))
+    for label, params, streaming in variants:
+        idx = pipnn.build(x, params, streaming=streaming)
         total = idx.timings["total"]
         for phase in PHASES:
             t = idx.timings[phase]
             rows.append((f"phases/{label}/{phase}", t * 1e6,
                          f"share={t / total:.3f}"))
+        for stat in BYTE_STATS:
+            rows.append((f"phases/{label}/{stat}", idx.stats[stat], "bytes"))
         rows.append((f"phases/{label}/total", total * 1e6,
                      f"peak_edge_bytes={idx.stats['peak_edge_bytes']}"))
     return rows

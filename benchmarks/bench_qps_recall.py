@@ -46,7 +46,13 @@ def run() -> list[Row]:
                                               beam=beam, iters=beam + 4)
             (ids, _), _ = timed(fn)
             (ids, _), secs = timed(fn, repeat=3)
-            r = recall_at_k(np.asarray(ids)[:, :10], truth[:, :10], 10)
+            # beam < 10 returns [Q, beam]: pad to [Q, 10] with -1 so this
+            # stays an honest 10@10 number (missing neighbors count as misses)
+            ids = np.asarray(ids)[:, :10]
+            if ids.shape[1] < 10:
+                ids = np.pad(ids, ((0, 0), (0, 10 - ids.shape[1])),
+                             constant_values=-1)
+            r = recall_at_k(ids, truth[:, :10], 10)
             rows.append((f"qps_recall/{name}/beam{beam}",
                          secs / q.shape[0] * 1e6,
                          f"recall={r:.3f} qps={q.shape[0] / secs:.0f}"))

@@ -4,10 +4,11 @@
 # Usage: scripts/check.sh            (from the repo root)
 #
 # 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
-# 2. runs a ~30 s smoke build (n=2000, d=32) through BOTH the streaming
-#    device-resident path and the O(E) flat oracle path and asserts the
-#    produced graphs are bit-identical, with streaming peak candidate-edge
-#    memory bounded by the chunk size.
+# 2. runs a ~30 s smoke build (n=2000, d=32) through the streaming
+#    device-resident path (segmented + flat-merge folds) and the O(E) flat
+#    oracle path and asserts the produced graphs are bit-identical, with
+#    streaming peak candidate-edge memory bounded by the chunk size; also
+#    smokes the streaming robust_prune leaf method against its flat oracle.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,16 +32,29 @@ for metric in ("l2", "mips"):
     p = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3,)),
                     leaf=LeafParams(k=2, leaf_chunk=8, stream_chunk=8),
                     l_max=32, max_deg=16, metric=metric, seed=1)
-    i_s = pipnn.build(x, p, streaming=True)
-    i_f = pipnn.build(x, p, streaming=False)
+    i_s = pipnn.build(x, p, streaming=True)                  # segmented fold
+    i_m = pipnn.build(x, p.with_(merge="flat"), streaming=True)
+    i_f = pipnn.build(x, p, streaming=False)                 # O(E) oracle
     np.testing.assert_array_equal(i_s.graph, i_f.graph)
     np.testing.assert_array_equal(i_s.dists, i_f.dists)
+    np.testing.assert_array_equal(i_m.graph, i_f.graph)
     bound = 2 * 8 * p.rbc.c_max * p.leaf.k * 16
     assert i_s.stats["peak_edge_bytes"] == bound, i_s.stats
     assert i_s.stats["peak_edge_bytes"] < i_f.stats["peak_edge_bytes"]
-    print(f"  {metric}: identical graphs; "
+    print(f"  {metric}: identical graphs (segmented + flat-merge folds); "
           f"peak bytes streaming={i_s.stats['peak_edge_bytes']} "
           f"flat={i_f.stats['peak_edge_bytes']}")
+
+# streaming robust_prune leaf method vs its flat oracle
+p = PiPNNParams(rbc=RBCParams(c_max=64, c_min=8, fanout=(3,)),
+                leaf=LeafParams(method="robust_prune", leaf_chunk=4,
+                                alpha=1.2, max_deg=8),
+                l_max=32, max_deg=16, seed=1)
+i_s = pipnn.build(x[:800], p, streaming=True)
+i_f = pipnn.build(x[:800], p, streaming=False)
+assert i_s.stats["streaming"] and not i_f.stats["streaming"]
+np.testing.assert_array_equal(i_s.graph, i_f.graph)
+print("  robust_prune leaf: streaming identical to flat oracle")
 print("smoke OK")
 EOF
 

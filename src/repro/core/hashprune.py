@@ -23,11 +23,20 @@ Two consequences we rely on (and property-test):
       the l_max nearest bucket-minima of C1 can never re-enter after more
       candidates arrive.  This licenses bounded-memory streaming of
       *batches* (one leaf / one shard at a time) while holding only the
-      [n, l_max] reservoir.  ``hashprune_merge_flat`` is the workhorse
-      entry point: it folds a flat candidate-edge chunk into an existing
-      reservoir (with buffer donation, so the [n, l_max] state never
-      reallocates) and is what both the streaming ``pipnn.build`` default
-      path and the distributed tile step use.
+      [n, l_max] reservoir.  Two fold entry points, both donation-friendly
+      so the [n, l_max] state never reallocates:
+
+        * ``hashprune_merge_segmented`` (the ``pipnn.build`` and SPMD tile
+          step default): applies the lemma twice — the chunk is reduced to
+          its own [n, l_max] reservoir by ONE global sort over just the
+          chunk's edges, then folded into the persistent reservoir by a
+          bounded per-row width-2*l_max merge (per-row sort fallback, or
+          the rank-based Pallas kernel in ``kernels/segmented_merge.py``).
+          The persistent reservoir never enters a global sort.
+        * ``hashprune_merge_flat`` (the oracle): re-expresses the reservoir
+          as a flat edge list and re-sorts it together with the chunk —
+          simple, but every fold pays O((n*l_max + E_chunk) log ...) sort
+          work.  The segmented fold is property-tested bit-identical to it.
 
 Tie-breaking: the paper implicitly assumes general position (distinct
 distances).  We make determinism unconditional by ordering candidates by the
@@ -261,6 +270,88 @@ def hashprune_merge_flat(
     """
     ids, hs, ds = _merge_flat_jit(res.ids, res.hashes, res.dists,
                                   src, dst, hashes, dists)
+    return Reservoir(ids=ids, hashes=hs, dists=ds)
+
+
+# ---------------------------------------------------------------------------
+# Segmented merge: chunk-local bucket dedup + bounded per-row reservoir merge
+# ---------------------------------------------------------------------------
+
+def merge_segmented_edges(res_ids, res_hashes, res_dists,
+                          src, dst, hashes, dists, *,
+                          use_pallas: bool = False,
+                          interpret: bool = True) -> Reservoir:
+    """Segmented fold of a flat candidate-edge chunk into a reservoir.
+
+    ``merge_flat_edges`` re-expresses the whole [n, l_max] reservoir as a
+    flat edge list and re-sorts it together with the chunk: every fold pays
+    two global O((n*l_max + E_chunk) log ...) multi-key sorts.  This path
+    exploits two invariants instead:
+
+      (1) the chunk alone can be bucket-deduped and row-bucketed by ONE
+          global sort over just its own edges (``hashprune_flat`` on the
+          chunk -> a [n, l_max] chunk reservoir), and
+      (2) both reservoirs are per-row sorted by (dist, id) with one slot
+          per hash bucket, so folding them is a BOUNDED per-row merge on
+          width-2*l_max rows (R(R(C1) ∪ R(C2)) = R(C1 ∪ C2) by Thm 3.1
+          applied twice) — the persistent reservoir never enters a global
+          sort at all.
+
+    Bit-identical to ``merge_flat_edges`` (both produce rows sorted by
+    (dist, id) with identical padding), which stays as the oracle.
+
+    ``use_pallas`` routes the per-row merge through the
+    ``kernels/segmented_merge.py`` kernel (rank-based merge of two sorted
+    rows + cross-reservoir bucket dedup, no sort); the fallback is the
+    per-row ``hashprune_batch`` sort.  Traceable either way — the streaming
+    chunk step and the SPMD tile step inline it.
+    """
+    n, l_max = res_ids.shape
+    chunk_res = hashprune_flat(src, dst, hashes, dists,
+                               n_points=n, l_max=l_max)
+    if use_pallas:
+        from repro.kernels.segmented_merge import merge_sorted_reservoirs
+
+        return merge_sorted_reservoirs(
+            res_ids, res_hashes, res_dists,
+            chunk_res.ids, chunk_res.hashes, chunk_res.dists,
+            interpret=interpret)
+    return hashprune_batch(
+        jnp.concatenate([res_ids, chunk_res.ids], axis=-1),
+        jnp.concatenate([res_hashes, chunk_res.hashes], axis=-1),
+        jnp.concatenate([res_dists, chunk_res.dists], axis=-1),
+        l_max=l_max)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"),
+                   donate_argnums=(0, 1, 2))
+def _merge_segmented_jit(res_ids, res_hashes, res_dists,
+                         src, dst, hashes, dists, *, use_pallas, interpret):
+    return merge_segmented_edges(res_ids, res_hashes, res_dists,
+                                 src, dst, hashes, dists,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+
+def hashprune_merge_segmented(
+    res: Reservoir,
+    src: jax.Array,
+    dst: jax.Array,
+    hashes: jax.Array,
+    dists: jax.Array,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Reservoir:
+    """Donating jit wrapper over ``merge_segmented_edges``.
+
+    Same contract as ``hashprune_merge_flat`` (``res`` is DONATED; padding
+    edges use src == n / dst == INVALID_ID / dist == +inf), but the global
+    sort work per fold is O(E_chunk log E_chunk) instead of
+    O((n*l_max + E_chunk) log (n*l_max + E_chunk)).
+    """
+    ids, hs, ds = _merge_segmented_jit(
+        res.ids, res.hashes, res.dists, src, dst, hashes, dists,
+        use_pallas=use_pallas, interpret=interpret)
     return Reservoir(ids=ids, hashes=hs, dists=ds)
 
 

@@ -17,11 +17,12 @@ Methods (A.3 ablation space):
   * ``robust_prune``     — all-to-all RobustPrune per leaf point.
 
 All methods emit a flat candidate edge list (src, dst, dist) ready for
-``hashprune_flat``.  The k-NN methods additionally have a device-side
-emitter (``emit_knn_edges_jax``) that the default streaming build fuses
-with the HashPrune merge so candidate edges never land on the host; the
-host-side ``build_leaf_edges``/``EdgeList`` path remains the oracle for the
-``mst`` / ``robust_prune`` methods and the flat build.
+``hashprune_flat``.  The k-NN methods and ``robust_prune`` additionally
+have device-side emitters (``emit_knn_edges_jax`` /
+``emit_robust_prune_edges_jax``) that the default streaming build fuses
+with the HashPrune fold so candidate edges never land on the host; the
+host-side ``build_leaf_edges``/``EdgeList`` path remains the oracle for
+those methods, and the only path for ``mst`` (host-side Kruskal).
 """
 from __future__ import annotations
 
@@ -176,6 +177,31 @@ def emit_knn_edges_jax(
         return dst, src, dist
     return (jnp.concatenate([src, dst]), jnp.concatenate([dst, src]),
             jnp.concatenate([dist, dist]))  # bidirected
+
+
+def emit_robust_prune_edges_jax(
+    leaf_ids: jax.Array,   # [B, C] global ids (-1 pad)
+    keep: jax.Array,       # [B, C, C] bool keep mask from _leaf_robust_prune
+    d: jax.Array,          # [B, C, C] masked leaf distance matrix
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side edge emitter for the ``robust_prune`` leaf method.
+
+    Fixed output shape [B*C*C]; invalid slots are (-1, -1, +inf).  The
+    ``robust_prune`` analogue of ``emit_knn_edges_jax``: traceable, so the
+    streaming build fuses leaf RobustPrune into the per-chunk jitted step
+    and its kept edges never bounce through the host.  Emits the same edge
+    set as the host path in ``build_leaf_edges`` (which compacts via
+    ``np.nonzero``), just padded instead of compacted — HashPrune's
+    order-freedom makes the two interchangeable downstream.
+    """
+    b, c, _ = keep.shape
+    rows = jnp.broadcast_to(leaf_ids[:, :, None], (b, c, c))
+    cols = jnp.broadcast_to(leaf_ids[:, None, :], (b, c, c))
+    ok = keep & (rows >= 0) & (cols >= 0)
+    src = jnp.where(ok, rows, -1).reshape(-1).astype(jnp.int32)
+    dst = jnp.where(ok, cols, -1).reshape(-1).astype(jnp.int32)
+    dist = jnp.where(ok, d, jnp.inf).reshape(-1).astype(jnp.float32)
+    return src, dst, dist
 
 
 def _mst_edges(leaf_ids: np.ndarray, d: np.ndarray, valid: np.ndarray,

@@ -8,28 +8,42 @@ Two Stage-2+3 execution strategies, selected by ``build(..., streaming=)``:
 
   * STREAMING (default, ``streaming=True``): a device-resident chunk
     pipeline.  For each chunk of leaves one fused jitted step runs the leaf
-    k-NN kernel, emits candidate edges as fixed-shape device arrays
-    (``leaf.emit_knn_edges_jax``), computes residual hashes from the
-    precomputed sketches (Pallas ``edge_hashes`` on TPU,
-    ``hash_from_sketches`` fallback elsewhere), and folds the chunk into
-    the persistent [n, l_max] reservoir via ``hashprune_merge_flat`` with
-    buffer donation.  The merge chunk (``LeafParams.stream_chunk``)
-    auto-sizes so one chunk's edge buffer is ~ the reservoir itself, which
-    amortizes the merge's global re-sort to O(E / (n * l_max)) passes;
-    the k-NN GEMM still runs at the ``leaf_chunk`` VMEM granularity inside
-    the fused step.  Peak intermediate memory is
-    O(stream_chunk * c_max * k + n * l_max) = O(n * l_max) in auto mode,
-    and there are no host round-trips inside the loop — candidate edges
-    never materialize on the host.
+    kernel — the k-NN methods (``bidirected`` / ``directed`` /
+    ``inverted``) or the all-to-all ``robust_prune`` leaf method — emits
+    candidate edges as fixed-shape device arrays
+    (``leaf.emit_knn_edges_jax`` / ``leaf.emit_robust_prune_edges_jax``),
+    computes residual hashes from the precomputed sketches (Pallas
+    ``edge_hashes`` on TPU, ``hash_from_sketches`` fallback elsewhere), and
+    folds the chunk into the persistent [n, l_max] reservoir with buffer
+    donation.  The fold is the SEGMENTED merge by default
+    (``PiPNNParams.merge``): one global sort over the chunk's own edges
+    plus a bounded per-row merge with the already-sorted reservoir
+    (``hashprune.merge_segmented_edges``; Pallas row-merge kernel on TPU
+    via ``use_pallas_merge``) — the persistent reservoir never enters a
+    global sort.  ``merge="flat"`` selects the reservoir-as-edges re-sort
+    fold (``hashprune_merge_flat``), kept as the oracle.  The merge chunk
+    (``LeafParams.stream_chunk``) auto-sizes so one chunk's edge buffer is
+    ~ the reservoir itself; the leaf GEMM still runs at the ``leaf_chunk``
+    VMEM granularity inside the fused step.  Peak intermediate memory is
+    O(stream_chunk_edges + n * l_max) = O(n * l_max) in auto mode, and
+    there are no host round-trips inside the loop — candidate edges never
+    materialize on the host.
 
-  * FLAT (``streaming=False``, and the fallback for the ``mst`` /
-    ``robust_prune`` leaf methods): materialize the whole candidate edge
-    list on the host, then run one global ``hashprune_flat`` sort.  O(E)
-    memory; kept as the oracle the streaming path is property-tested
-    against (mergeability lemma, hashprune.py).
+  * FLAT (``streaming=False``, and the fallback for the ``mst`` leaf
+    method only): materialize the whole candidate edge list on the host,
+    then run one global ``hashprune_flat`` sort.  O(E) memory; kept as the
+    oracle the streaming path is property-tested against (mergeability
+    lemma, hashprune.py).
 
-Both paths are bit-identical by HashPrune's mergeability (Theorem 3.1):
-tests assert equal graphs on both metrics.
+Stage 4 (``robust_prune.final_prune``) is device-resident too: a donated
+[n, max_deg] output buffer pair is filled chunk-by-chunk via
+``lax.dynamic_update_slice`` with a single device->host transfer at the
+end, so with ``streaming=True`` the entire Stage 2-4 pipeline performs no
+per-chunk host syncs.
+
+All paths are bit-identical by HashPrune's mergeability (Theorem 3.1):
+tests assert equal graphs on both metrics, for both the segmented and flat
+folds, and streaming-vs-host final_prune.
 
 The build is deterministic under a fixed seed (Appendix A.8): RBC is
 deterministic given its RNG stream, and HashPrune is history-independent
@@ -56,15 +70,24 @@ import numpy as np
 
 from repro.core import sketch as _sketch
 from repro.core.hashprune import (INVALID_ID, Reservoir, hashprune_flat,
-                                  merge_flat_edges, reservoir_init)
-from repro.core.leaf import (EdgeList, LeafParams, build_leaf_edges,
-                             emit_knn_edges_jax, iter_leaf_id_chunks,
+                                  merge_flat_edges, merge_segmented_edges,
+                                  reservoir_init)
+from repro.core.leaf import (EdgeList, LeafParams, _leaf_robust_prune,
+                             build_leaf_edges, emit_knn_edges_jax,
+                             emit_robust_prune_edges_jax, iter_leaf_id_chunks,
                              leaf_knn_jax)
 from repro.core.rbc import RBCParams, leaves_to_padded, partition
 from repro.core.robust_prune import final_prune
 
 _KNN_METHODS = ("bidirected", "directed", "inverted")
-_EDGE_BYTES = 16  # src + dst + hash (int32) + dist (f32) per candidate edge
+_STREAM_METHODS = _KNN_METHODS + ("robust_prune",)
+# Actual per-entry allocation of candidate-edge arrays, used for the
+# apples-to-apples memory stats: a fully materialized edge carries
+# src + dst + hash (int32) + dist (f32); the host EdgeList has no hash
+# field, and a reservoir slot stores id + hash + dist (its row is implied).
+_EDGE_BYTES = 16
+_EDGE_BYTES_NOHASH = 12
+_SLOT_BYTES = 12
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +103,11 @@ class PiPNNParams:
     metric: str = "l2"
     seed: int = 0
     use_pallas_hash: bool | None = None  # None: auto (Pallas on TPU only)
+    merge: str = "segmented"   # streaming reservoir fold: "segmented" folds
+    #                            each chunk via a chunk-only sort + bounded
+    #                            per-row merge; "flat" is the global-re-sort
+    #                            oracle (hashprune_merge_flat).  Bit-identical.
+    use_pallas_merge: bool | None = None  # None: auto (Pallas on TPU only)
 
     def effective_alpha(self) -> float:
         if self.metric == "l2":
@@ -109,11 +137,14 @@ class PiPNNIndex:
         return float((self.graph >= 0).sum() / self.graph.shape[0])
 
 
-def _resolve_pallas(params: PiPNNParams) -> tuple[bool, bool]:
-    """(use_pallas, interpret) for the residual-hash kernel."""
+def _resolve_pallas(params: PiPNNParams) -> tuple[bool, bool, bool]:
+    """(use_pallas_hash, use_pallas_merge, interpret) for the Pallas kernels."""
     on_tpu = jax.default_backend() == "tpu"
-    use = on_tpu if params.use_pallas_hash is None else bool(params.use_pallas_hash)
-    return use, not on_tpu
+    use_hash = (on_tpu if params.use_pallas_hash is None
+                else bool(params.use_pallas_hash))
+    use_merge = (on_tpu if params.use_pallas_merge is None
+                 else bool(params.use_pallas_merge))
+    return use_hash, use_merge, not on_tpu
 
 
 def _hash_edges(
@@ -137,23 +168,30 @@ def _make_stream_step(
     knn_fn: Callable | None,
     k: int,
     metric: str,
-    direction: str,
+    method: str,
     use_pallas: bool,
     interpret: bool,
     sub_chunk: int,
+    alpha: float,
+    max_deg: int,
+    merge: str,
+    use_pallas_merge: bool,
 ):
     """Compile the per-chunk fused step.
 
     step(res_ids, res_hashes, res_dists, xj, sketches, ids_chunk)
       -> (res_ids', res_hashes', res_dists', n_valid_edges)
 
-    ``ids_chunk`` is [stream_chunk, c_max]; the leaf k-NN runs over
-    ``sub_chunk``-sized sub-batches (the VMEM-budget GEMM granularity,
-    unrolled in the trace) while edge emission, hashing and the reservoir
-    fold happen once per chunk — so the expensive [n, l_max] re-sort is
-    amortized over many leaves.  The reservoir triplet is donated so the
-    persistent state is updated in place across the whole stream.  Cached
-    on (knn_fn identity, statics) so repeated builds reuse one executable.
+    ``ids_chunk`` is [stream_chunk, c_max]; the leaf kernel (k-NN or, for
+    the ``robust_prune`` method, the all-to-all leaf RobustPrune) runs over
+    ``sub_chunk``-sized sub-batches (the VMEM-budget GEMM granularity)
+    while edge emission, hashing and the reservoir fold happen once per
+    chunk — so the merge cost is amortized over many leaves.  The fold is
+    the segmented merge by default (chunk-only global sort + bounded
+    per-row reservoir merge); ``merge="flat"`` selects the global-re-sort
+    oracle.  The reservoir triplet is donated so the persistent state is
+    updated in place across the whole stream.  Cached on (knn_fn identity,
+    statics) so repeated builds reuse one executable.
     """
     knn = knn_fn or (lambda pts, valid: leaf_knn_jax(
         pts, valid, k=k, metric=metric))
@@ -164,8 +202,13 @@ def _make_stream_step(
 
         def block(ids_sub):  # [sub_chunk, c_max] -> flat edge arrays
             pts = xj[jnp.maximum(ids_sub, 0)]
+            if method == "robust_prune":
+                keep, d = _leaf_robust_prune(
+                    pts, ids_sub >= 0, metric=metric, alpha=alpha,
+                    max_deg=max_deg)
+                return emit_robust_prune_edges_jax(ids_sub, keep, d)
             ni, nd = knn(pts, ids_sub >= 0)
-            return emit_knn_edges_jax(ids_sub, ni, nd, direction=direction)
+            return emit_knn_edges_jax(ids_sub, ni, nd, direction=method)
 
         # lax.map (not an unrolled python loop): program size stays constant
         # however large the auto-sized stream chunk grows, and the [C, C]
@@ -176,7 +219,10 @@ def _make_stream_step(
         h = _sketch.edge_hashes_from_ids(
             sketches, src, dst, use_pallas=use_pallas, interpret=interpret)
         ok = src >= 0
-        merged = merge_flat_edges(
+        fold = merge_flat_edges if merge == "flat" else functools.partial(
+            merge_segmented_edges, use_pallas=use_pallas_merge,
+            interpret=interpret)
+        merged = fold(
             res_ids, res_hashes, res_dists,
             jnp.where(ok, src, jnp.int32(n)),
             jnp.where(ok, dst, INVALID_ID),
@@ -189,23 +235,31 @@ def _make_stream_step(
     return jax.jit(step, donate_argnums=(0, 1, 2))
 
 
+def _stream_edges_per_leaf(leaf: LeafParams, c_max: int) -> int:
+    """Candidate-edge buffer entries one padded leaf contributes to the
+    fused step (the emitters' fixed output shapes)."""
+    if leaf.method == "robust_prune":
+        return c_max * c_max      # emit_robust_prune_edges_jax: [C, C] mask
+    fan = 2 if leaf.method == "bidirected" else 1
+    return fan * c_max * leaf.k   # emit_knn_edges_jax
+
+
 def _stream_chunk_leaves(
     leaf: LeafParams, n: int, l_max: int, nleaves: int, c_max: int
 ) -> int:
     """Leaves per streaming merge step (a multiple of ``leaf_chunk``).
 
     Auto mode sizes the chunk so one chunk's padded candidate-edge buffer
-    is ~ the reservoir ([n, l_max] entries): the merge's global re-sort
-    then costs O(E / (n * l_max)) passes total while peak intermediate
-    memory stays O(n * l_max) — the paper's "no extra intermediate
-    memory" contract — instead of O(E).
+    is ~ the reservoir ([n, l_max] entries): the merge's re-sort work
+    then amortizes to O(E / (n * l_max)) passes total while peak
+    intermediate memory stays O(n * l_max) — the paper's "no extra
+    intermediate memory" contract — instead of O(E).
     """
     lc = max(1, leaf.leaf_chunk)
     if leaf.stream_chunk is not None:
         s = max(lc, int(leaf.stream_chunk))
     else:
-        fan = 2 if leaf.method == "bidirected" else 1
-        edges_per_leaf = max(1, c_max * leaf.k * fan)
+        edges_per_leaf = max(1, _stream_edges_per_leaf(leaf, c_max))
         s = max(lc, (n * l_max) // edges_per_leaf)
     s = min(s, max(lc, nleaves))          # never over-allocate past the data
     return -(-s // lc) * lc               # round up to a leaf_chunk multiple
@@ -221,12 +275,15 @@ def _build_reservoir_streaming(
     """Stream leaf chunks through the fused step; returns
     (reservoir, n_candidate_edges, memory stats)."""
     leaf = params.leaf
-    use_pallas, interpret = _resolve_pallas(params)
+    use_pallas, use_pallas_merge, interpret = _resolve_pallas(params)
     n = x.shape[0]
     nleaves, c_max = leaves_padded.shape
     chunk = _stream_chunk_leaves(leaf, n, params.l_max, nleaves, c_max)
-    step = _make_stream_step(knn_fn, leaf.k, params.metric, leaf.method,
-                             use_pallas, interpret, max(1, leaf.leaf_chunk))
+    step = _make_stream_step(
+        knn_fn if leaf.method in _KNN_METHODS else None,
+        leaf.k, params.metric, leaf.method, use_pallas, interpret,
+        max(1, leaf.leaf_chunk), leaf.alpha, leaf.max_deg, params.merge,
+        use_pallas_merge)
     xj = jnp.asarray(x)
     res = reservoir_init(n, params.l_max)
     ids_r, hs_r, ds_r = res.ids, res.hashes, res.dists
@@ -235,10 +292,22 @@ def _build_reservoir_streaming(
         ids_r, hs_r, ds_r, cnt = step(ids_r, hs_r, ds_r, xj, sketches,
                                       jnp.asarray(ids))
         counts.append(cnt)  # device scalar: no per-chunk host sync
-    fan = 2 if leaf.method == "bidirected" else 1
+    # actual allocated candidate-edge bytes: the fused step materializes
+    # src/dst/hash/dist for every (padded) chunk entry; `chunk` is already
+    # capped at the padded leaf count, so this is the real buffer size
+    chunk_entries = chunk * _stream_edges_per_leaf(leaf, c_max)
+    if params.merge == "flat":
+        # the fold re-expresses the reservoir as n*l_max padding-extended
+        # edges and sorts them together with the chunk
+        merge_ws = (n * params.l_max + chunk_entries) * _EDGE_BYTES
+    else:
+        # chunk-only global sort + [n, 2*l_max] per-row merge
+        merge_ws = chunk_entries * _EDGE_BYTES + 2 * n * params.l_max * _SLOT_BYTES
     mem = {
         "stream_chunk_leaves": chunk,
-        "peak_edge_bytes": fan * chunk * c_max * leaf.k * _EDGE_BYTES,
+        "peak_edge_bytes": chunk_entries * _EDGE_BYTES,
+        "edge_bytes_build_leaves": chunk_entries * _EDGE_BYTES,
+        "merge_workspace_bytes": merge_ws,
     }
     n_edges = int(np.sum([np.asarray(c) for c in counts])) if counts else 0
     return Reservoir(ids=ids_r, hashes=hs_r, dists=ds_r), n_edges, mem
@@ -293,7 +362,7 @@ def build(
     leaf = dataclasses.replace(params.leaf, metric=params.metric)
     lparams = dataclasses.replace(params, leaf=leaf)
 
-    stream_ok = streaming and leaf.method in _KNN_METHODS
+    stream_ok = streaming and leaf.method in _STREAM_METHODS
     stats["streaming"] = stream_ok
 
     if stream_ok:
@@ -317,11 +386,17 @@ def build(
         edges = build_leaf_edges(x, padded, leaf, knn_fn=knn_fn)
         timings["build_leaves"] = time.perf_counter() - t0
         stats["n_candidate_edges"] = int(edges.valid().sum())
+        # the host EdgeList carries no hash field (12 B/edge); Stage 3 then
+        # materializes src/dst/hash/dist device arrays for ALL edges at once
+        # (16 B/edge) — that is the actual peak, reported apples-to-apples
+        # with the streaming path's chunk buffers
+        stats["edge_bytes_build_leaves"] = int(edges.src.size) * _EDGE_BYTES_NOHASH
+        stats["merge_workspace_bytes"] = int(edges.src.size) * _EDGE_BYTES
         stats["peak_edge_bytes"] = int(edges.src.size) * _EDGE_BYTES
 
         # --- Stage 3: HashPrune (Sec. 3) ----------------------------------
         t0 = time.perf_counter()
-        use_pallas, interpret = _resolve_pallas(params)
+        use_pallas, _, interpret = _resolve_pallas(params)
         sketches = np.asarray(_sketch.sketch_jit(jnp.asarray(x), hyperplanes))
         hashes = _hash_edges(edges, sketches, use_pallas=use_pallas,
                              interpret=interpret)
@@ -371,7 +446,8 @@ def search(
     beam: int = 32,
     batch: bool = True,
 ) -> np.ndarray:
-    """Query the index; returns [Q, k] neighbor ids."""
+    """Query the index; returns [Q, k] neighbor ids, -1-padded when fewer
+    than ``k`` neighbors are found (e.g. ``beam < k``)."""
     from repro.core import beam_search as bs
 
     if batch:
@@ -380,7 +456,11 @@ def search(
             jnp.asarray(index.graph), jnp.asarray(x), jnp.asarray(queries),
             start=index.start, beam=beam, iters=iters, metric=index.params.metric,
         )
-        return np.asarray(ids)[:, :k]
+        out = np.asarray(ids)[:, :k]
+        if out.shape[1] < k:  # beam < k: pad to [Q, k] like the non-batch path
+            out = np.pad(out, ((0, 0), (0, k - out.shape[1])),
+                         constant_values=-1)
+        return out
     out = np.empty((queries.shape[0], k), dtype=np.int64)
     for i, q in enumerate(queries):
         ids, _, _ = bs.beam_search_np(

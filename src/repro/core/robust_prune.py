@@ -11,6 +11,18 @@ Three forms:
     point's HashPrune reservoir (<= l_max candidates, so the O(l^2)
     candidate-candidate distance matrix is tiny).
 
+``final_prune`` is device-resident by default: one jitted chunk step slides
+over the reservoir with ``lax.dynamic_slice`` and writes results into
+persistent [n, max_deg] output buffers via ``lax.dynamic_update_slice``
+(buffers donated across steps, so they never reallocate), with a single
+device->host transfer at the end — the same bounded-memory streaming
+pattern as the Stage 2+3 pipeline.  The previous host-looped variant
+(``np.asarray`` sync per chunk) is kept as ``final_prune_host``, the oracle
+streaming is property-tested against.  ``prune_reservoir_block`` is the
+shared traceable core: the streaming step here and the distributed
+final-prune superstep (``launch/build_index.py``) both call it, so the two
+builds prune identically.
+
 The paper's 'lazy' variant (App. A.3.3) defers dominance checks to insertion
 time; on TPU the batch form already evaluates all dominance tests as dense
 masked arithmetic, which subsumes the laziness trick (noted in DESIGN.md).
@@ -118,6 +130,59 @@ def robust_prune_mask(
     return keep
 
 
+def prune_reservoir_block(
+    ids: jax.Array,     # [B, L] candidate ids (INVALID_ID padding)
+    dists: jax.Array,   # [B, L] point->candidate dissimilarity
+    d_cc: jax.Array,    # [B, L, L] candidate->candidate dissimilarity
+    *,
+    alpha: float,
+    max_deg: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Traceable core of the final pass: RobustPrune a reservoir block.
+
+    The caller supplies ``d_cc`` (host build: gathered vectors through
+    ``metrics.pairwise``; distributed build: routed vectors through its own
+    GEMM), so both builds share exactly this keep/compact/truncate logic.
+    Returns ([B, max_deg] ids with -1 padding, [B, max_deg] dists with +inf
+    padding), rows sorted by (dist, id).
+    """
+    d_pc = jnp.where(ids == INVALID_ID, jnp.inf, dists)
+    keep = robust_prune_mask(d_pc, d_cc, ids, alpha=alpha, max_deg=max_deg)
+    # compact kept entries to the front: sort by (dist-if-kept, id)
+    k_d = jnp.where(keep, d_pc, jnp.inf)
+    s_d, s_i = jax.lax.sort((k_d, ids), dimension=-1, num_keys=2)
+    l = ids.shape[-1]
+    if l >= max_deg:
+        s_d, s_i = s_d[..., :max_deg], s_i[..., :max_deg]
+    else:
+        pad = [(0, 0)] * (s_d.ndim - 1) + [(0, max_deg - l)]
+        s_d = jnp.pad(s_d, pad, constant_values=jnp.inf)
+        s_i = jnp.pad(s_i, pad, constant_values=-1)
+    return jnp.where(jnp.isfinite(s_d), s_i, -1), s_d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "max_deg", "metric", "chunk"),
+    donate_argnums=(0, 1),
+)
+def _final_prune_step(
+    out_ids, out_d, x, res_ids, res_dists, start, *,
+    alpha, max_deg, metric, chunk,
+):
+    """One streaming chunk: slice [chunk, L] of the reservoir at ``start``,
+    prune it, write into the donated [n, max_deg] output buffers."""
+    ids = jax.lax.dynamic_slice_in_dim(res_ids, start, chunk)
+    dists = jax.lax.dynamic_slice_in_dim(res_dists, start, chunk)
+    cvecs = x[jnp.maximum(ids, 0)]                          # [chunk, L, d]
+    d_cc = jax.vmap(lambda a: _metrics.pairwise(a, a, metric))(cvecs)
+    s_i, s_d = prune_reservoir_block(ids, dists, d_cc,
+                                     alpha=alpha, max_deg=max_deg)
+    out_ids = jax.lax.dynamic_update_slice_in_dim(out_ids, s_i, start, axis=0)
+    out_d = jax.lax.dynamic_update_slice_in_dim(out_d, s_d, start, axis=0)
+    return out_ids, out_d
+
+
 def final_prune(
     x: jax.Array,
     res: Reservoir,
@@ -127,10 +192,45 @@ def final_prune(
     metric: str = "l2",
     chunk: int = 2048,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Sec. 4.3 final pass: RobustPrune every reservoir.
+    """Sec. 4.3 final pass: RobustPrune every reservoir — device-resident.
+
+    Streams ``chunk``-sized reservoir blocks through one jitted step that
+    writes into persistent donated [n, max_deg] buffers; no per-chunk host
+    sync (the loop enqueues device work only), one device->host transfer at
+    the end.  Bit-identical to ``final_prune_host``.
 
     Returns (adjacency [n, max_deg] int32 with -1 padding,
              dists     [n, max_deg] f32 with +inf padding).
+    """
+    n, _ = res.ids.shape
+    chunk = max(1, min(chunk, n))
+    x = jnp.asarray(x)
+    res_ids, res_dists = jnp.asarray(res.ids), jnp.asarray(res.dists)
+    out_ids = jnp.full((n, max_deg), -1, dtype=jnp.int32)
+    out_d = jnp.full((n, max_deg), jnp.inf, dtype=jnp.float32)
+    for s in range(0, n, chunk):
+        # the tail chunk re-covers the last full window: rows in the overlap
+        # are recomputed from identical inputs, so the double write is
+        # idempotent and every compiled shape is [chunk, L]
+        out_ids, out_d = _final_prune_step(
+            out_ids, out_d, x, res_ids, res_dists, min(s, n - chunk),
+            alpha=alpha, max_deg=max_deg, metric=metric, chunk=chunk)
+    return np.asarray(out_ids), np.asarray(out_d)
+
+
+def final_prune_host(
+    x: jax.Array,
+    res: Reservoir,
+    *,
+    alpha: float = 1.2,
+    max_deg: int = 64,
+    metric: str = "l2",
+    chunk: int = 2048,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-looped final pass (the pre-streaming oracle).
+
+    Syncs ``np.asarray`` per chunk; kept for property tests asserting the
+    streaming variant is bit-identical.
     """
     n, l = res.ids.shape
     x = jnp.asarray(x)

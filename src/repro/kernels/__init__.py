@@ -6,6 +6,8 @@ leaf_knn.py  — FlashKNN: fused distances + running top-k, never materializes
                the C_max^2 leaf matrix in HBM (beyond-paper optimization).
 topk.py      — batched row-wise partial top-k (VQPartialSort analogue).
 edge_hash.py — fused residual-hash bit packing (paper Eq. 1).
+segmented_merge.py — rank-based per-row merge of two sorted HashPrune
+               reservoirs (the segmented fold's bounded merge, no sort).
 ops.py       — jit'd wrappers; ref.py — pure-jnp oracles.
 """
 from repro.kernels import ops, ref

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: bounded per-row merge of two sorted HashPrune
+reservoirs (the segmented-merge hot loop, hashprune.py).
+
+Inputs are two [n, l_max] reservoirs whose rows satisfy the HashPrune
+invariants: sorted ascending by (dist, id), at most one slot per residual
+hash bucket, padding (id == -1, dist == +inf) at the tail.  The kernel
+produces R(A ∪ B) per row without any sort:
+
+  * cross-reservoir bucket dedup — within a row each side already holds its
+    bucket minima, so a collision can only pair an A slot with a B slot:
+    one [l, l] hash-equality compare per side decides the losers
+    (lexicographic (dist, id); ties keep A);
+  * rank-based merge — each surviving slot's output position is its own
+    survivor rank plus the count of survivors on the other side with a
+    smaller key (two more [l, l] compares), so the merged row materializes
+    through one-hot selects instead of a sort network;
+  * truncate to l_max, pad with (id -1, hash 0, dist +inf).
+
+Everything is elementwise compares + small-axis reductions on [rows, l, l]
+tiles — pure VPU work, no MXU, no gather/scatter.  Bit-identical to the
+``hashprune_batch``-based fallback in ``merge_segmented_edges`` (asserted
+by tests in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashprune import Reservoir
+
+_ROWS = 8  # row block per grid step (f32 sublane tile)
+
+
+def _lt(d1, i1, d2, i2):
+    """(dist, id) lexicographic strict less-than, broadcasting."""
+    return (d1 < d2) | ((d1 == d2) & (i1 < i2))
+
+
+def _select(onehot, x, fill):
+    """Per output slot, pick the single input slot flagged in ``onehot``
+    [R, l_out, l_in]; ``fill`` where no slot is flagged (avoids 0 * inf)."""
+    picked = jnp.sum(jnp.where(onehot, x[:, None, :], 0), axis=2)
+    return jnp.where(jnp.any(onehot, axis=2), picked, fill)
+
+
+def _merge_rows_kernel(a_i_ref, a_h_ref, a_d_ref,
+                       b_i_ref, b_h_ref, b_d_ref,
+                       o_i_ref, o_h_ref, o_d_ref, *, l: int):
+    ai, ah, ad = a_i_ref[...], a_h_ref[...], a_d_ref[...]   # [R, l]
+    bi, bh, bd = b_i_ref[...], b_h_ref[...], b_d_ref[...]
+    va, vb = ai != -1, bi != -1
+
+    # pair [r, i, j] = (A slot i, B slot j)
+    b_lt_a = _lt(bd[:, None, :], bi[:, None, :], ad[:, :, None], ai[:, :, None])
+    a_le_b = ~b_lt_a
+    pair_ok = va[:, :, None] & vb[:, None, :]
+    collide = (ah[:, :, None] == bh[:, None, :]) & pair_ok
+
+    # bucket dedup: the strictly-smaller key wins; exact key ties keep A
+    keep_a = va & ~jnp.any(collide & b_lt_a, axis=2)
+    keep_b = vb & ~jnp.any(collide & a_le_b, axis=1)
+
+    # survivor rank = own-side survivors before me + other-side survivors
+    # with a smaller key (A wins (dist, id) ties, so B counts a_le_b)
+    excl = lambda k: jnp.cumsum(k.astype(jnp.int32), axis=1) - k.astype(jnp.int32)
+    pos_a = excl(keep_a) + jnp.sum(
+        (keep_b[:, None, :] & b_lt_a).astype(jnp.int32), axis=2)
+    pos_b = excl(keep_b) + jnp.sum(
+        (keep_a[:, :, None] & a_le_b).astype(jnp.int32), axis=1)
+
+    slot = jax.lax.broadcasted_iota(jnp.int32, (ai.shape[0], l, l), 1)
+    oh_a = keep_a[:, None, :] & (pos_a[:, None, :] == slot)
+    oh_b = keep_b[:, None, :] & (pos_b[:, None, :] == slot)
+    o_i_ref[...] = _select(oh_a, ai, 0) + _select(oh_b, bi, 0) - jnp.where(
+        jnp.any(oh_a | oh_b, axis=2), 0, 1)
+    o_h_ref[...] = _select(oh_a, ah, 0) + _select(oh_b, bh, 0)
+    o_d_ref[...] = jnp.minimum(_select(oh_a, ad, jnp.inf),
+                               _select(oh_b, bd, jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sorted_reservoirs(
+    a_ids: jax.Array, a_hashes: jax.Array, a_dists: jax.Array,
+    b_ids: jax.Array, b_hashes: jax.Array, b_dists: jax.Array,
+    *,
+    interpret: bool = False,
+) -> Reservoir:
+    """R(A ∪ B) for two per-row-sorted [n, l_max] reservoirs.
+
+    Output rows sorted by (dist, id), padded with (-1, 0, +inf) — the same
+    representation ``hashprune_batch`` produces.
+    """
+    n, l = a_ids.shape
+    pad = (-n) % _ROWS
+    if pad:
+        pr = lambda x, v: jnp.pad(x, ((0, pad), (0, 0)), constant_values=v)
+        a_ids, a_hashes, a_dists = pr(a_ids, -1), pr(a_hashes, 0), pr(a_dists, jnp.inf)
+        b_ids, b_hashes, b_dists = pr(b_ids, -1), pr(b_hashes, 0), pr(b_dists, jnp.inf)
+    rows = a_ids.shape[0]
+    spec = pl.BlockSpec((_ROWS, l), lambda r: (r, 0))
+    out = pl.pallas_call(
+        functools.partial(_merge_rows_kernel, l=l),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, l), jnp.int32),
+            jax.ShapeDtypeStruct((rows, l), jnp.int32),
+            jax.ShapeDtypeStruct((rows, l), jnp.float32),
+        ),
+        grid=(rows // _ROWS,),
+        in_specs=[spec] * 6,
+        out_specs=(spec, spec, spec),
+        interpret=interpret,
+    )(a_ids, a_hashes, a_dists, b_ids, b_hashes, b_dists)
+    ids, hs, ds = (x[:n] for x in out)
+    return Reservoir(ids=ids, hashes=hs, dists=ds)

@@ -43,9 +43,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import sketch as _sketch
 from repro.core.hashprune import (INVALID_ID, Reservoir, merge_flat_edges,
-                                  reservoir_init)
+                                  merge_segmented_edges, reservoir_init)
 from repro.distributed import compat as _compat
-from repro.core.robust_prune import robust_prune_mask
+from repro.core.robust_prune import prune_reservoir_block
 from repro.distributed.routing import group_by_capacity
 
 INF = jnp.float32(jnp.inf)
@@ -82,6 +82,10 @@ class DistBuildParams:
     leaf_dtype: str = "f32"      # "f32" | "bf16": dtype of the materialized
     #                              leaf distance matrix (bf16 halves the
     #                              dominant HBM traffic; ranking-only use)
+    merge: str = "segmented"     # reservoir fold in the tile step:
+    #                              "segmented" sorts only the received edge
+    #                              chunk and does a bounded per-row merge;
+    #                              "flat" is the global-re-sort oracle
 
     @classmethod
     def tiny(cls, **kw) -> "DistBuildParams":
@@ -333,11 +337,13 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
             x.reshape((S * dv["cap_edge"],) + x.shape[2:]) for x in r_edges]
 
         # ---- 6. HashPrune: fold flat edges straight into the reservoir ----
-        # same fused merge as the streaming host build (mergeability lemma):
-        # one global sort over reservoir-as-edges + chunk, no intermediate
-        # per-tile reservoir
+        # same fused fold as the streaming host build (mergeability lemma);
+        # "segmented" sorts only this superstep's edge chunk and merges the
+        # persistent reservoir per row, "flat" re-sorts reservoir-as-edges
+        # together with the chunk
         lsrc = jnp.where(r_ok, m_src - me * n_loc, n_loc)
-        merged = merge_flat_edges(
+        fold = merge_flat_edges if p.merge == "flat" else merge_segmented_edges
+        merged = fold(
             res_ids, res_hash, res_dist,
             lsrc, jnp.where(r_ok, m_dst, INVALID_ID), m_h,
             jnp.where(r_ok, m_d, INF))
@@ -408,18 +414,15 @@ def make_final_prune_step(mesh: Mesh, p: DistBuildParams):
         cand_vecs = gat.reshape(n_loc, p.l_max, p.dim)
 
         def prune_chunk(t):
+            # d_cc from the routed vectors; the keep/compact/truncate logic
+            # is the shared block the host build's final_prune also uses
             ids, dists, vecs = t
             ip = jnp.einsum("bld,bmd->blm", vecs, vecs)
             n2 = jnp.sum(vecs * vecs, axis=-1)
             d_cc = jnp.maximum(
                 n2[:, :, None] + n2[:, None, :] - 2.0 * ip, 0.0)
-            d_pc = jnp.where(ids == INVALID_ID, INF, dists)
-            keep = robust_prune_mask(d_pc, d_cc, ids,
-                                     alpha=p.alpha, max_deg=p.max_deg)
-            kid = jnp.where(keep, ids, INVALID_ID)
-            kd = jnp.where(keep, d_pc, INF)
-            kd, kid = jax.lax.sort((kd, kid), dimension=-1, num_keys=2)
-            return kid[:, : p.max_deg], kd[:, : p.max_deg]
+            return prune_reservoir_block(ids, dists, d_cc,
+                                         alpha=p.alpha, max_deg=p.max_deg)
 
         nch = n_loc // p.prune_chunk
         resh = lambda a: a.reshape((nch, p.prune_chunk) + a.shape[1:])

@@ -1,6 +1,8 @@
 """Streaming device-resident build: pipeline-level mergeability property
-tests (``hashprune_merge_flat``), streaming-vs-flat bit-identity of the full
-``pipnn.build``, and the bounded peak-candidate-memory guarantee.
+tests (``hashprune_merge_flat`` and the segmented merge), streaming-vs-flat
+bit-identity of the full ``pipnn.build`` (k-NN and ``robust_prune`` leaf
+methods), streaming-vs-host ``final_prune`` bit-identity, and the bounded
+peak-candidate-memory guarantee.
 
 Deliberately hypothesis-free (seeded rng sweeps) so these run even where
 hypothesis is unavailable — they are the pipeline-level counterpart of the
@@ -17,12 +19,14 @@ from repro.core.hashprune import (
     canonicalize,
     hashprune_flat,
     hashprune_merge_flat,
+    hashprune_merge_segmented,
     reservoir_as_edges,
     reservoir_init,
 )
 from repro.core.leaf import LeafParams, build_leaf_edges, emit_knn_edges_jax
 from repro.core.pipnn import PiPNNParams
 from repro.core.rbc import RBCParams
+from repro.core.robust_prune import final_prune, final_prune_host
 
 
 def _res_np(res: Reservoir):
@@ -70,6 +74,43 @@ def test_merge_flat_matches_oneshot(metric, n_chunks):
                 jnp.asarray(hashes[a:b]), jnp.asarray(dist[a:b]))
         for got, want in zip(_res_np(res), _res_np(oneshot)):
             np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_segmented_merge_bit_identical_to_flat_merge(metric, use_pallas):
+    """The segmented fold (chunk-only sort + bounded per-row merge; pure-JAX
+    and the interpret-mode Pallas kernel) is bit-identical — raw arrays, no
+    canonicalize — to ``hashprune_merge_flat``, which stays the oracle."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        n, e, l_max = 40, 1200, 8
+        src, dst, hashes, dist = _random_edges(rng, n, e, metric)
+        res_f = reservoir_init(n, l_max)
+        res_s = reservoir_init(n, l_max)
+        bounds = np.linspace(0, e, 4).astype(int)
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            args = (jnp.asarray(src[a:b]), jnp.asarray(dst[a:b]),
+                    jnp.asarray(hashes[a:b]), jnp.asarray(dist[a:b]))
+            res_f = hashprune_merge_flat(res_f, *args)
+            res_s = hashprune_merge_segmented(
+                res_s, *args, use_pallas=use_pallas, interpret=True)
+        for got, want in zip(res_s, res_f):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_merge_handles_padding_edges():
+    """Padding edges (src == n) and INVALID dst must be dropped."""
+    n, l_max = 4, 4
+    res = reservoir_init(n, l_max)
+    src = jnp.asarray([0, n, n], dtype=jnp.int32)
+    dst = jnp.asarray([1, INVALID_ID, INVALID_ID], dtype=jnp.int32)
+    h = jnp.zeros(3, jnp.int32)
+    d = jnp.asarray([1.0, np.inf, np.inf], dtype=jnp.float32)
+    res = hashprune_merge_segmented(res, src, dst, h, d)
+    ids = np.asarray(res.ids)
+    assert ids[0, 0] == 1
+    assert (ids[1:] == -1).all() and (ids[0, 1:] == -1).all()
 
 
 def test_merge_flat_handles_padding_edges():
@@ -144,6 +185,18 @@ def test_streaming_peak_memory_bounded_by_chunk():
     assert i_s.stats["peak_edge_bytes"] < i_f.stats["peak_edge_bytes"]
     # flat peak scales with E (every candidate edge materialized at once)
     assert i_f.stats["peak_edge_bytes"] >= i_f.stats["n_candidate_edges"] * 16
+    # per-path actual-allocation stats: the host EdgeList has no hash field
+    # (12 B/edge); the streaming chunk buffers carry all four fields
+    e_alloc = i_f.stats["peak_edge_bytes"] // 16
+    assert i_f.stats["edge_bytes_build_leaves"] == e_alloc * 12
+    assert i_f.stats["merge_workspace_bytes"] == e_alloc * 16
+    assert i_s.stats["edge_bytes_build_leaves"] == bound
+    # segmented merge: chunk-only sort + [n, 2*l_max] per-row rows
+    n = x.shape[0]
+    assert i_s.stats["merge_workspace_bytes"] == bound + 2 * n * p.l_max * 12
+    # flat-merge fold pays the reservoir-as-edges re-sort instead
+    i_m = pipnn.build(x, p.with_(merge="flat"), streaming=True)
+    assert i_m.stats["merge_workspace_bytes"] == bound + n * p.l_max * 16
 
 
 def test_streaming_auto_chunk_is_reservoir_bounded():
@@ -158,7 +211,37 @@ def test_streaming_auto_chunk_is_reservoir_bounded():
     assert i_s.stats["peak_edge_bytes"] <= 16 * (n * p.l_max + slack)
 
 
-def test_streaming_falls_back_for_non_knn_leaf_methods():
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+def test_streaming_flat_merge_variant_bit_identical(metric):
+    """merge="flat" (the global-re-sort oracle fold) and the default
+    segmented fold produce the same graph as the flat build."""
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((1200, 24)).astype(np.float32)
+    p = _smoke_params(metric)
+    i_f = pipnn.build(x, p, streaming=False)
+    for merge in ("segmented", "flat"):
+        i_s = pipnn.build(x, p.with_(merge=merge), streaming=True)
+        np.testing.assert_array_equal(i_s.graph, i_f.graph)
+        np.testing.assert_array_equal(i_s.dists, i_f.dists)
+
+
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+def test_streaming_robust_prune_leaf_bit_identical_to_flat(metric):
+    """The robust_prune leaf method now streams; only ``mst`` falls back."""
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((900, 16)).astype(np.float32)
+    p = _smoke_params(metric, rbc=RBCParams(c_max=64, c_min=8, fanout=(3,)),
+                      leaf=LeafParams(method="robust_prune", leaf_chunk=4,
+                                      alpha=1.2, max_deg=8))
+    i_s = pipnn.build(x, p, streaming=True)
+    i_f = pipnn.build(x, p, streaming=False)
+    assert i_s.stats["streaming"] and not i_f.stats["streaming"]
+    np.testing.assert_array_equal(i_s.graph, i_f.graph)
+    np.testing.assert_array_equal(i_s.dists, i_f.dists)
+    assert i_s.stats["n_candidate_edges"] == i_f.stats["n_candidate_edges"]
+
+
+def test_streaming_falls_back_for_mst_leaf_method():
     rng = np.random.default_rng(3)
     x = rng.standard_normal((600, 16)).astype(np.float32)
     p = _smoke_params("l2")
@@ -166,6 +249,68 @@ def test_streaming_falls_back_for_non_knn_leaf_methods():
     idx = pipnn.build(x, p, streaming=True)
     assert not idx.stats["streaming"]
     assert (idx.graph >= 0).any(axis=1).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming final prune (Stage 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+@pytest.mark.parametrize("l_max,max_deg", [(8, 16), (16, 8), (8, 8)])
+def test_final_prune_streaming_matches_host(metric, l_max, max_deg):
+    """Device-resident final_prune == host-looped oracle, bit for bit —
+    including l_max < max_deg, l_max > max_deg, and the tie/duplicate-heavy
+    reservoirs _random_edges produces (quantized distances)."""
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        n, e = 50, 900
+        src, dst, hashes, dist = _random_edges(rng, n, e, metric)
+        res = hashprune_flat(
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
+            jnp.asarray(dist), n_points=n, l_max=l_max)
+        x = rng.standard_normal((n, 12)).astype(np.float32)
+        # chunk=7 does not divide n: exercises the idempotent tail overlap
+        g_s, d_s = final_prune(x, res, alpha=1.3, max_deg=max_deg,
+                               metric=metric, chunk=7)
+        g_h, d_h = final_prune_host(x, res, alpha=1.3, max_deg=max_deg,
+                                    metric=metric, chunk=7)
+        np.testing.assert_array_equal(g_s, g_h)
+        np.testing.assert_array_equal(d_s, d_h)
+
+
+def test_final_prune_chunk_larger_than_n():
+    rng = np.random.default_rng(11)
+    n = 20
+    src, dst, hashes, dist = _random_edges(rng, n, 200, "l2")
+    res = hashprune_flat(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(hashes),
+        jnp.asarray(dist), n_points=n, l_max=8)
+    x = rng.standard_normal((n, 6)).astype(np.float32)
+    g_s, d_s = final_prune(x, res, max_deg=4, chunk=4096)
+    g_h, d_h = final_prune_host(x, res, max_deg=4, chunk=4096)
+    np.testing.assert_array_equal(g_s, g_h)
+    np.testing.assert_array_equal(d_s, d_h)
+
+
+# ---------------------------------------------------------------------------
+# search shape contract
+# ---------------------------------------------------------------------------
+
+def test_search_beam_smaller_than_k_pads_to_k():
+    """Regression: beam < k used to silently return [Q, beam]."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((800, 16)).astype(np.float32)
+    idx = pipnn.build(x, _smoke_params("l2"))
+    q = x[:7]
+    for beam in (4, 10, 32):
+        for batch in (True, False):
+            found = pipnn.search(idx, x, q, k=10, beam=beam, batch=batch)
+            assert found.shape == (7, 10), (beam, batch, found.shape)
+            if beam < 10:
+                assert (found[:, beam:] == -1).all()
+    # real neighbors fill the non-padded prefix
+    found = pipnn.search(idx, x, q, k=10, beam=4)
+    assert (found[:, :4] >= 0).all()
 
 
 def test_emit_knn_edges_jax_matches_numpy():
