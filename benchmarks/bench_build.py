@@ -13,10 +13,8 @@ across PRs.
 """
 from __future__ import annotations
 
-import json
-import pathlib
-
-from benchmarks.common import Row, dataset, graph_recall, ground_truth, timed
+from benchmarks.common import (Row, append_bench_json, dataset, graph_recall,
+                               ground_truth, timed)
 from repro.core import pipnn
 from repro.core.baselines.hcnng import HCNNGParams, build_hcnng
 from repro.core.baselines.hnsw import HNSWParams, build_hnsw
@@ -34,23 +32,6 @@ def _pipnn_params(replicas: int = 1) -> PiPNNParams:
         rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2), replicas=replicas),
         leaf=LeafParams(k=2), hash_bits=12, l_max=64, max_deg=MAX_DEG,
         seed=0)
-
-
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_build.json"
-
-
-def _dump_json(records: list[dict]) -> None:
-    """Append this run's records to BENCH_build.json (list of run dicts)."""
-    history = []
-    if BENCH_JSON.exists():
-        try:
-            history = json.loads(BENCH_JSON.read_text())
-        except (json.JSONDecodeError, OSError):
-            history = []
-        if not isinstance(history, list):
-            history = []
-    history.append({"n": N, "d": D, "max_deg": MAX_DEG, "records": records})
-    BENCH_JSON.write_text(json.dumps(history, indent=1))
 
 
 def run() -> list[Row]:
@@ -121,5 +102,5 @@ def run() -> list[Row]:
                      f"recall={r:.3f} speedup_vs_vamana={speedup:.2f}x "
                      f"deg={float((graph >= 0).sum(1).mean()):.1f}"))
         records.append({"variant": name, "wall_s": secs, "recall": r})
-    _dump_json(records)
+    append_bench_json(records, bench="build", n=N, d=D, max_deg=MAX_DEG)
     return rows

@@ -17,17 +17,26 @@ def run() -> list[Row]:
     x, q = dataset(N, D)
     truth = ground_truth(N, D)
     rows: list[Row] = []
-    for method in ("rbc", "binary", "kmeans", "sorting_lsh"):
+    # the three rbc execution strategies ride along the four-method
+    # ablation: rbc == rbc_device bit-identically (same leaves), rbc_static
+    # is the fully-static two-level carve (spill-routed capacities)
+    variants = [("rbc", "auto"), ("rbc_device", "device"),
+                ("rbc_static", "static"), ("binary", "auto"),
+                ("kmeans", "auto"), ("sorting_lsh", "auto")]
+    for label, execution in variants:
+        method = "rbc" if label.startswith("rbc") else label
         # binary/sorting_lsh have no fanout analog (paper A.1) -> replicas
-        rbc = RBCParams(c_max=256, c_min=32, fanout=(4, 2), replicas=1) \
+        rbc = RBCParams(c_max=256, c_min=32, fanout=(4, 2), replicas=1,
+                        execution=execution) \
             if method in ("rbc", "kmeans") else \
             RBCParams(c_max=256, c_min=32, fanout=(1,), replicas=4)
         p = PiPNNParams(rbc=rbc, partitioner=method, leaf=LeafParams(k=2),
                         max_deg=32, seed=0)
         idx = pipnn.build(x, p)
         r = graph_recall(idx.graph, idx.start, x, q, truth, beam=64)
-        rows.append((f"partitioning/{method}",
+        rows.append((f"partitioning/{label}",
                      idx.timings["partition"] * 1e6,
                      f"recall={r:.3f} leaves={idx.stats['n_leaves']} "
-                     f"repeat={idx.stats['point_repeat']:.2f}"))
+                     f"repeat={idx.stats['point_repeat']:.2f} "
+                     f"exec={idx.stats['partition_execution']}"))
     return rows

@@ -2,10 +2,16 @@
 Final-Prune, from the orchestrator's own timers — for the streaming
 device-resident pipeline (segmented merge default), the flat-merge fold
 variant, and the O(E) flat oracle, plus each path's actual allocated
-candidate-edge / merge-workspace bytes (peak, per stage)."""
+candidate-edge / merge-workspace bytes (peak, per stage).
+
+Also sweeps the Stage-1 execution strategies (host numpy oracle,
+host-orchestrated device carve, fully-static two-level device carve) and
+records the device-vs-host partition wall-time deltas as a
+``partition_delta`` record in BENCH_build.json — the regression signal
+for the ROADMAP's "Stage 1 is the last host bottleneck" item."""
 from __future__ import annotations
 
-from benchmarks.common import Row, dataset
+from benchmarks.common import Row, append_bench_json, dataset
 from repro.core import pipnn
 from repro.core.leaf import LeafParams
 from repro.core.pipnn import PiPNNParams
@@ -18,15 +24,34 @@ BYTE_STATS = ("peak_edge_bytes", "edge_bytes_build_leaves",
               "merge_workspace_bytes")
 
 
+def _params(execution: str = "auto") -> PiPNNParams:
+    return PiPNNParams(
+        rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2), execution=execution),
+        leaf=LeafParams(k=2), max_deg=32, seed=0)
+
+
 def run() -> list[Row]:
     x, _ = dataset(N, D)
-    p = PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
-                    leaf=LeafParams(k=2), max_deg=32, seed=0)
     rows: list[Row] = []
+    records: list[dict] = []
+    p = _params()
     variants = (("streaming", p, True),
                 ("streaming_flatmerge", p.with_(merge="flat"), True),
-                ("flat", p, False))
+                ("flat", p, False),
+                # Stage-1 execution sweep (streaming Stage 2-4 throughout):
+                # host oracle vs host-orchestrated device carve vs the
+                # fully-static two-level device carve
+                ("part_host", _params("host"), True),
+                ("part_device", _params("device"), True),
+                ("part_static", _params("static"), True))
+    part_wall: dict[str, float] = {}
     for label, params, streaming in variants:
+        if label in ("part_device", "part_static"):
+            # warm run: these Stage-1 paths jit-compile per padded shape
+            # on first use; partition_delta should record the steady-state
+            # wall time, not tracing overhead (part_host is pure numpy and
+            # its Stage 2-4 shapes were already compiled by "streaming")
+            pipnn.build(x, params, streaming=streaming)
         idx = pipnn.build(x, params, streaming=streaming)
         total = idx.timings["total"]
         for phase in PHASES:
@@ -37,4 +62,26 @@ def run() -> list[Row]:
             rows.append((f"phases/{label}/{stat}", idx.stats[stat], "bytes"))
         rows.append((f"phases/{label}/total", total * 1e6,
                      f"peak_edge_bytes={idx.stats['peak_edge_bytes']}"))
+        records.append({
+            "variant": label,
+            "partition_execution": idx.stats["partition_execution"],
+            "timings": {k: float(v) for k, v in idx.timings.items()},
+            "n_leaves": int(idx.stats["n_leaves"]),
+            "partition_uncovered": int(idx.stats["partition_uncovered"]),
+        })
+        if label.startswith("part_"):
+            part_wall[label] = idx.timings["partition"]
+    records.append({
+        "variant": "partition_delta",
+        "device_vs_host_partition_s":
+            part_wall["part_device"] - part_wall["part_host"],
+        "static_vs_host_partition_s":
+            part_wall["part_static"] - part_wall["part_host"],
+    })
+    rows.append(("phases/partition_delta/device_vs_host",
+                 (part_wall["part_device"] - part_wall["part_host"]) * 1e6,
+                 f"host_s={part_wall['part_host']:.3f} "
+                 f"device_s={part_wall['part_device']:.3f} "
+                 f"static_s={part_wall['part_static']:.3f}"))
+    append_bench_json(records, bench="phases", n=N, d=D)
     return rows

@@ -10,6 +10,8 @@ dry-run, not here.
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
 import time
 from typing import Callable
 
@@ -34,6 +36,25 @@ def ground_truth(n: int, d: int, seed: int = 0, k: int = 10,
                  n_queries: int = 256) -> np.ndarray:
     x, q = dataset(n, d, seed, n_queries)
     return brute_force_knn(x, q, k)
+
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_build.json"
+
+
+def append_bench_json(records: list[dict], **meta) -> None:
+    """Append one run's records to BENCH_build.json (list of run dicts) so
+    the perf trajectory is tracked across PRs.  ``meta`` (n, d, bench, ...)
+    is stored alongside the records."""
+    history = []
+    if BENCH_JSON.exists():
+        try:
+            history = json.loads(BENCH_JSON.read_text())
+        except (json.JSONDecodeError, OSError):
+            history = []
+        if not isinstance(history, list):
+            history = []
+    history.append({**meta, "records": records})
+    BENCH_JSON.write_text(json.dumps(history, indent=1))
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw):

@@ -4,11 +4,17 @@
 # Usage: scripts/check.sh            (from the repo root)
 #
 # 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
-# 2. runs a ~30 s smoke build (n=2000, d=32) through the streaming
+# 2. re-runs the partition-invariant + degenerate-data regression suite
+#    standalone (fast; it is also part of tier-1)
+# 3. runs a ~30 s smoke build (n=2000, d=32) through the streaming
 #    device-resident path (segmented + flat-merge folds) and the O(E) flat
 #    oracle path and asserts the produced graphs are bit-identical, with
 #    streaming peak candidate-edge memory bounded by the chunk size; also
-#    smokes the streaming robust_prune leaf method against its flat oracle.
+#    smokes the streaming robust_prune leaf method against its flat oracle
+# 4. smokes the fully-static Stage-1 (ball_carve_device) end to end: its
+#    build's recall must be at parity with the recursive RBC baseline
+#    (device-vs-host ball_carve bit-identity is covered by the partition
+#    suite in step 2)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,6 +22,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
+
+echo "== partition invariants + degenerate-data regressions =="
+python -m pytest -q tests/test_partitioners.py
 
 echo "== smoke: streaming vs flat build (n=2000, d=32) =="
 python - <<'EOF'
@@ -56,6 +65,34 @@ assert i_s.stats["streaming"] and not i_f.stats["streaming"]
 np.testing.assert_array_equal(i_s.graph, i_f.graph)
 print("  robust_prune leaf: streaming identical to flat oracle")
 print("smoke OK")
+EOF
+
+echo "== smoke: Stage-1 static partitioner recall parity =="
+# (device-vs-host ball_carve bit-identity runs in tests/test_partitioners.py)
+python - <<'EOF'
+import numpy as np
+
+from repro.core import pipnn
+from repro.core.beam_search import brute_force_knn, recall_at_k
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+q = x[:64] + 0.01 * rng.standard_normal((64, 32)).astype(np.float32)
+truth = brute_force_knn(x, q, 10)
+recalls = {}
+for execution in ("host", "static"):
+    p = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3, 2),
+                                  execution=execution),
+                    leaf=LeafParams(k=2), l_max=32, max_deg=16, seed=1)
+    idx = pipnn.build(x, p, streaming=True)
+    found = pipnn.search(idx, x, q, k=10, beam=64)
+    recalls[execution] = recall_at_k(found, truth, 10)
+print(f"  recall: rbc={recalls['host']:.3f} static={recalls['static']:.3f}")
+assert recalls["static"] >= recalls["host"] - 0.03, recalls
+print("stage-1 smoke OK")
 EOF
 
 echo "ALL CHECKS PASSED"

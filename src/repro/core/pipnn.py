@@ -4,6 +4,20 @@ This is the host-orchestrated reference/build path used by tests, examples
 and benchmarks; the fully-static multi-pod SPMD build lives in
 ``repro/launch/build_index.py`` and reuses the same stage functions.
 
+Stage 1 execution strategies, selected by ``RBCParams.execution``
+(see ``core/rbc.py``): ``"host"`` is the numpy oracle recursion,
+``"device"`` keeps only the variable-size worklist on the host while the
+per-subproblem leader GEMM / top-f / bucket grouping run as fixed-shape
+jitted steps (bit-identical leaves to the oracle for a fixed seed), and
+``"static"`` runs the whole stage as ONE jitted two-level carve
+(``ball_carve_device``, the ``build_index.py`` tile-step shape) so
+``build(streaming=True)`` executes Stage 1-4 with zero host compute.
+All three share the leader-assignment step in ``core/leader_assign.py``
+with the SPMD build.  ``stats["partition_execution"]`` records the
+resolved strategy; ``stats["partition_uncovered"]`` counts points in no
+leaf — an invariant tripwire that should always be 0 (the static path
+appends salvage leaves for replicas its capacity routing dropped).
+
 Two Stage-2+3 execution strategies, selected by ``build(..., streaming=)``:
 
   * STREAMING (default, ``streaming=True``): a device-resident chunk
@@ -76,7 +90,8 @@ from repro.core.leaf import (EdgeList, LeafParams, _leaf_robust_prune,
                              build_leaf_edges, emit_knn_edges_jax,
                              emit_robust_prune_edges_jax, iter_leaf_id_chunks,
                              leaf_knn_jax)
-from repro.core.rbc import RBCParams, leaves_to_padded, partition
+from repro.core.rbc import (RBCParams, leaves_to_padded, padded_coverage,
+                            partition_padded, resolve_execution)
 from repro.core.robust_prune import final_prune
 
 _KNN_METHODS = ("bidirected", "directed", "inverted")
@@ -343,17 +358,27 @@ def build(
     stats: dict[str, Any] = {}
 
     # --- Stage 1: overlapping partitioning (Sec. 4.1) ---------------------
+    # partition_padded produces the dense [L, c_max] device-facing matrix
+    # directly; with rbc.execution="static" the whole stage is ONE jitted
+    # two-level carve (ball_carve_device) with zero host recursion, with
+    # "device" the host keeps only the worklist while the per-subproblem
+    # math runs jitted, and with "host" it is the original numpy oracle.
     t0 = time.perf_counter()
     if leaves is None:
         rbc = dataclasses.replace(params.rbc, metric=params.metric, seed=params.seed)
-        leaves = partition(x, rbc, params.partitioner)
-    padded = leaves_to_padded(leaves, params.rbc.c_max)
+        padded = partition_padded(x, rbc, params.partitioner)
+        stats["partition_execution"] = (
+            resolve_execution(rbc) if params.partitioner == "rbc" else "host")
+    else:
+        padded = leaves_to_padded(leaves, params.rbc.c_max)
+        stats["partition_execution"] = "caller"
     timings["partition"] = time.perf_counter() - t0
-    sizes = np.asarray([len(b) for b in leaves])
-    stats["n_leaves"] = len(leaves)
+    sizes = (padded >= 0).sum(axis=1)
+    stats["n_leaves"] = int(padded.shape[0])
     stats["leaf_size_mean"] = float(sizes.mean()) if len(sizes) else 0.0
     stats["point_repeat"] = float(sizes.sum() / max(n, 1))
     stats["pad_ratio"] = float(padded.size / max(sizes.sum(), 1))
+    stats["partition_uncovered"] = n - padded_coverage(padded, n)
 
     import jax.random as jrandom
 

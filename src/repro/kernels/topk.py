@@ -18,6 +18,21 @@ from jax.experimental import pallas as pl
 from repro.kernels.leaf_knn import _merge_topk
 
 
+def topf(dists: jax.Array, f: int) -> jax.Array:
+    """Indices [..., f] of the f smallest entries along the last axis,
+    ordered ascending; equal values tie-break to the lower index
+    (``lax.top_k`` semantics — the same order a stable argsort produces).
+
+    This is the selection half of the shared Stage-1 leader-assignment
+    step (``core/leader_assign.py``) and of the SPMD build's bucket /
+    leaf fanout selection (``launch/build_index.py``).  It is the XLA
+    top-k; ``rowwise_topk`` below is the Pallas single-pass variant for
+    matrices that already live in HBM on TPU.
+    """
+    _, idx = jax.lax.top_k(-dists, f)
+    return idx.astype(jnp.int32)
+
+
 def _topk_kernel(d_ref, ov_ref, oi_ref, *, k: int, bm: int, bn: int):
     j = pl.program_id(2)
 

@@ -44,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import sketch as _sketch
 from repro.core.hashprune import (INVALID_ID, Reservoir, merge_flat_edges,
                                   merge_segmented_edges, reservoir_init)
+from repro.core.leader_assign import leader_assign
 from repro.distributed import compat as _compat
 from repro.core.robust_prune import prune_reservoir_block
 from repro.distributed.routing import group_by_capacity
@@ -134,10 +135,6 @@ def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
 # Tile superstep
 # ---------------------------------------------------------------------------
 
-def _topf(dists: jax.Array, f: int) -> jax.Array:
-    """Indices of the f smallest entries along the last axis."""
-    _, idx = jax.lax.top_k(-dists, f)
-    return idx.astype(jnp.int32)
 
 
 def _quantize(v: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -208,8 +205,7 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
         lead_local = points[::lead_stride][: p.l0 // S]   # [l0/S, d]
         leaders0 = jax.lax.all_gather(
             lead_local, axes, axis=0, tiled=True)         # [l0, d]
-        d0 = _pair_dist(points, leaders0)                 # [n_loc, l0]
-        bucket = _topf(d0, p.f0)                          # [n_loc, f0]
+        bucket = leader_assign(points, leaders0, p.f0)    # [n_loc, f0]
 
         # ---- 2. route point replicas to bucket owners ---------------------
         flat_bucket = bucket.reshape(-1)                  # [n_loc*f0]
@@ -254,15 +250,12 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
         l1_stride = max(dv["cap_b"] // p.l1, 1)
         lead1 = b_vecf[:, ::l1_stride][:, : p.l1]          # [nb, l1, d]
         lead1_ok = g_valid[:, ::l1_stride][:, : p.l1]      # [nb, l1]
-        lead1_n2 = jnp.sum(lead1 * lead1, axis=-1)
 
         def assign_chunk(chunk_vec, chunk_valid):
-            ip = jnp.einsum("bcd,bld->bcl", chunk_vec, lead1)
-            n2 = jnp.sum(chunk_vec * chunk_vec, axis=-1)
-            d1 = n2[:, :, None] + lead1_n2[:, None, :] - 2.0 * ip
-            d1 = jnp.where(lead1_ok[:, None, :], d1, INF)
-            d1 = jnp.where(chunk_valid[:, :, None], d1, INF)
-            return _topf(d1, p.f1)                        # [nb, ch, f1]
+            # shared Stage-1 leader-assignment step: batched GEMM + top-f1
+            return leader_assign(
+                chunk_vec, lead1, p.f1, point_valid=chunk_valid,
+                leader_valid=lead1_ok)                    # [nb, ch, f1]
 
         n_chunks = dv["cap_b"] // p.assign_chunk
         cvecs = b_vecf.reshape(nb_loc, n_chunks, p.assign_chunk, p.dim)
@@ -368,13 +361,6 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
         return Reservoir(ids, hs, ds), stats
 
     return tile_step
-
-
-def _pair_dist(a: jax.Array, b: jax.Array) -> jax.Array:
-    ip = a @ b.T
-    a2 = jnp.sum(a * a, axis=-1)[:, None]
-    b2 = jnp.sum(b * b, axis=-1)[None, :]
-    return jnp.maximum(a2 + b2 - 2.0 * ip, 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,274 @@
+"""Partition-invariant suite for all four Stage-1 partitioners, the
+device-vs-host ``ball_carve`` bit-identity contract, and the
+degenerate-data regressions (duplicate-heavy inputs) this PR hardens
+against:
+
+  * ``ball_carve`` / ``kmeans_carve`` used to recurse forever when every
+    point of a subproblem assigned to one leader (bucket == parent);
+  * ``binary_partition``'s coin-flip fallback could produce an empty side
+    and re-push the full subproblem;
+  * ``sorting_lsh_partition`` packed hash bits into a float64 key that
+    silently collided for n_bits > 53.
+
+Deliberately hypothesis-free (seeded rng sweeps) so everything runs in
+the container, like tests/test_streaming_build.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pipnn
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import (
+    RBCParams,
+    ball_carve,
+    ball_carve_device,
+    binary_partition,
+    bit_lex_order,
+    kmeans_carve,
+    padded_coverage,
+    partition,
+    partition_padded,
+    sorting_lsh_partition,
+)
+
+METHODS = ("rbc", "binary", "kmeans", "sorting_lsh")
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(3)
+    return rng.standard_normal((1500, 12)).astype(np.float32)
+
+
+def _check_invariants(leaves, n, c_max):
+    seen = np.zeros(n, dtype=bool)
+    for leaf in leaves:
+        assert 0 < len(leaf) <= c_max
+        assert len(np.unique(leaf)) == len(leaf), "duplicate id inside a leaf"
+        seen[leaf] = True
+    assert seen.all(), "every point must land in at least one leaf"
+
+
+# ---------------------------------------------------------------- suite ---
+
+@pytest.mark.parametrize("metric", ["l2", "mips"])
+@pytest.mark.parametrize("method", METHODS)
+def test_invariants_coverage_capacity_determinism(data, method, metric):
+    p = RBCParams(c_max=96, c_min=12, p_samp=0.02, fanout=(3, 2),
+                  metric=metric, seed=5)
+    a = partition(data, p, method)
+    _check_invariants(a, data.shape[0], p.c_max)
+    b = partition(data, p, method)
+    assert len(a) == len(b)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la, lb)
+
+
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_device_ball_carve_bit_identical_to_host(data, metric):
+    """The host-orchestrated device carve consumes the same RNG stream and
+    reproduces the numpy oracle's assignment decisions, so the leaves are
+    bit-identical for a fixed seed."""
+    p = RBCParams(c_max=128, c_min=16, p_samp=0.02, fanout=(3, 2),
+                  metric=metric, seed=9)
+    host = ball_carve(data, p, execution="host")
+    dev = ball_carve(data, p, execution="device")
+    assert len(host) == len(dev)
+    for lh, ld in zip(host, dev):
+        np.testing.assert_array_equal(lh, ld)
+
+
+def test_execution_override_beats_params(data):
+    p = RBCParams(c_max=128, c_min=16, fanout=(3,), seed=2, execution="device")
+    dev = ball_carve(data, p)                      # params say device
+    host = ball_carve(data, p, execution="host")   # call-site override
+    assert len(dev) == len(host)
+    for lh, ld in zip(host, dev):
+        np.testing.assert_array_equal(lh, ld)
+
+
+# ------------------------------------------------- degenerate regressions ---
+
+def test_ball_carve_duplicate_points_terminates():
+    """Regression: all-identical points used to recurse forever (every point
+    assigns to one leader -> bucket == parent re-pushed with no progress).
+    The progress guard force-splits by permutation halves."""
+    x = np.ones((600, 8), dtype=np.float32)
+    p = RBCParams(c_max=64, c_min=8, p_samp=0.05, fanout=(3,), seed=0)
+    leaves = ball_carve(x, p, execution="host")
+    _check_invariants(leaves, x.shape[0], p.c_max)
+    # device orchestration shares the worklist + guard: still bit-identical
+    dev = ball_carve(x, p, execution="device")
+    assert len(dev) == len(leaves)
+    for lh, ld in zip(leaves, dev):
+        np.testing.assert_array_equal(lh, ld)
+
+
+def test_kmeans_carve_duplicate_points_terminates():
+    x = np.ones((500, 6), dtype=np.float32)
+    p = RBCParams(c_max=64, c_min=8, p_samp=0.05, fanout=(2,), seed=1)
+    leaves = kmeans_carve(x, p)
+    _check_invariants(leaves, x.shape[0], p.c_max)
+
+
+def test_binary_partition_duplicate_points_terminates():
+    """Regression: the degenerate-split guard used a coin-flip mask that
+    could leave one side empty and re-push the whole subproblem; the
+    permutation-halves split guarantees progress."""
+    x = np.ones((400, 4), dtype=np.float32)
+    leaves = binary_partition(x, c_max=16, seed=3)
+    _check_invariants(leaves, x.shape[0], 16)
+    # binary partitioning is disjoint: sizes must sum to n exactly
+    assert sum(len(b) for b in leaves) == x.shape[0]
+
+
+def test_bit_lex_order_full_precision_past_53_bits():
+    """Regression: the float64 key (key = key*2 + bit) lost bits past the
+    f64 mantissa, collapsing distinct 64-bit codes onto one key."""
+    bits = np.zeros((4, 64), dtype=bool)
+    bits[:, :50] = True          # identical 50-bit prefix
+    bits[1, 60] = True
+    bits[2, 63] = True
+    bits[3, 60:] = True
+    order = bit_lex_order(bits)
+    # lexicographic: row0 (all-zero tail) < row2 (bit 63) < row1 (bit 60)
+    # < row3 (bits 60..63); the old float key tied all four
+    np.testing.assert_array_equal(order, [0, 2, 1, 3])
+    # stability: identical rows keep their original relative order
+    dup = np.tile(bits[3], (3, 1))
+    np.testing.assert_array_equal(bit_lex_order(dup), [0, 1, 2])
+
+
+def test_bit_lex_order_matches_float_key_when_exact():
+    """For n_bits <= 53 the uint64 packing must reproduce the old float64
+    ordering exactly (no behavior change where the old key was lossless)."""
+    rng = np.random.default_rng(11)
+    bits = rng.random((300, 24)) < 0.5
+    key = np.zeros(300, dtype=np.float64)
+    for i in range(24):
+        key = key * 2 + bits[:, i]
+    np.testing.assert_array_equal(
+        bit_lex_order(bits), np.argsort(key, kind="stable"))
+
+
+def test_sorting_lsh_64_bits(data):
+    leaves = sorting_lsh_partition(data, c_max=64, n_bits=64, seed=2)
+    _check_invariants(leaves, data.shape[0], 64)
+    again = sorting_lsh_partition(data, c_max=64, n_bits=64, seed=2)
+    for la, lb in zip(leaves, again):
+        np.testing.assert_array_equal(la, lb)
+
+
+# ------------------------------------------------- shared leader_assign ---
+
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_leader_assign_matches_numpy_oracle(metric):
+    import jax.numpy as jnp
+
+    from repro.core.leader_assign import leader_assign
+    from repro.core.rbc import _nearest_leaders
+
+    rng = np.random.default_rng(13)
+    x = rng.standard_normal((200, 10)).astype(np.float32)
+    leaders = x[rng.choice(200, 17, replace=False)]
+    want = _nearest_leaders(x, leaders, 4, metric)
+    got = np.asarray(leader_assign(jnp.asarray(x), jnp.asarray(leaders), 4,
+                                   metric=metric))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_leader_assign_pallas_path_matches_default():
+    """The Pallas distance + rowwise_topk route (interpret mode on CPU)
+    selects the same leaders as the jnp path."""
+    import jax.numpy as jnp
+
+    from repro.core.leader_assign import leader_assign
+
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((3, 64, 8)).astype(np.float32))
+    leaders = jnp.asarray(rng.standard_normal((3, 12, 8)).astype(np.float32))
+    lead_ok = jnp.asarray(np.arange(12) < 10)[None, :].repeat(3, 0)
+    base = leader_assign(x, leaders, 3, leader_valid=lead_ok)
+    pallas = leader_assign(x, leaders, 3, leader_valid=lead_ok,
+                           use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pallas), np.asarray(base))
+
+
+def test_leader_assign_masks_invalid_leaders():
+    import jax.numpy as jnp
+
+    from repro.core.leader_assign import leader_assign
+
+    rng = np.random.default_rng(19)
+    x = jnp.asarray(rng.standard_normal((30, 6)).astype(np.float32))
+    leaders = jnp.asarray(rng.standard_normal((8, 6)).astype(np.float32))
+    ok = jnp.asarray(np.arange(8) < 5)
+    got = np.asarray(leader_assign(x, leaders, 3, leader_valid=ok))
+    assert got.max() < 5, "masked leaders must never be selected"
+
+
+# ---------------------------------------------------- static device carve ---
+
+def test_static_ball_carve_invariants(data):
+    p = RBCParams(c_max=128, c_min=16, fanout=(3, 2), seed=4,
+                  execution="static")
+    padded = ball_carve_device(data, p)
+    assert padded.ndim == 2 and padded.shape[1] == p.c_max
+    sizes = (padded >= 0).sum(axis=1)
+    assert (sizes > 0).all(), "empty leaves must be filtered"
+    ids = padded[padded >= 0]
+    assert ids.min() >= 0 and ids.max() < data.shape[0]
+    for row in padded:
+        v = row[row >= 0]
+        assert len(np.unique(v)) == len(v), "duplicate id inside a leaf"
+    # coverage is guaranteed (salvage leaves catch capacity-drop victims)
+    n = data.shape[0]
+    assert padded_coverage(padded, n) == n
+    # deterministic given the seed
+    np.testing.assert_array_equal(padded, ball_carve_device(data, p))
+    # partition_padded routes rbc+static through the same path
+    np.testing.assert_array_equal(padded, partition_padded(data, p))
+
+
+def test_static_ball_carve_covers_duplicate_heavy_data():
+    """Regression: a dense duplicate cluster overflows every ball it hashes
+    to, so capacity routing dropped most of it — the salvage pass must
+    re-add every lost point."""
+    rng = np.random.default_rng(21)
+    x = np.concatenate([np.zeros((1500, 8), np.float32),
+                        rng.standard_normal((500, 8)).astype(np.float32)])
+    p = RBCParams(c_max=64, c_min=8, fanout=(3, 2), seed=6,
+                  execution="static")
+    padded = ball_carve_device(x, p)
+    assert padded_coverage(padded, x.shape[0]) == x.shape[0]
+    for row in padded:
+        v = row[row >= 0]
+        assert 0 < len(v) <= p.c_max
+        assert len(np.unique(v)) == len(v)
+    # all-identical input: still full coverage, bounded leaves
+    dup = np.ones((600, 8), np.float32)
+    padded = ball_carve_device(dup, p)
+    assert padded_coverage(padded, 600) == 600
+
+
+def test_static_partitioner_end_to_end_build():
+    """pipnn.build(streaming=True) with the static partitioner produces a
+    searchable index with recall at parity with the recursive RBC build."""
+    from repro.core.beam_search import brute_force_knn, recall_at_k
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2000, 32)).astype(np.float32)
+    q = x[:64] + 0.01 * rng.standard_normal((64, 32)).astype(np.float32)
+    truth = brute_force_knn(x, q, 10)
+    base = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3, 2)),
+                       leaf=LeafParams(k=2), l_max=32, max_deg=16, seed=1)
+    recalls = {}
+    for tag, rbc_exec in (("host", "host"), ("static", "static")):
+        p = base.with_(rbc=RBCParams(c_max=128, c_min=16, fanout=(3, 2),
+                                     execution=rbc_exec))
+        idx = pipnn.build(x, p, streaming=True)
+        assert idx.stats["partition_execution"] == rbc_exec
+        ids = pipnn.search(idx, x, q, k=10, beam=64)
+        recalls[tag] = recall_at_k(ids, truth, 10)
+    assert recalls["static"] >= recalls["host"] - 0.03, recalls
