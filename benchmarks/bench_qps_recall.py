@@ -1,22 +1,36 @@
-"""Fig. 5: QPS-vs-recall curves for PiPNN (1 and 2 replicas) vs Vamana.
+"""Fig. 5: QPS-vs-recall curves for PiPNN (1 and 2 replicas) vs Vamana,
+plus the serving-engine comparison the multi-expansion PR is about:
 
-Emits one row per (index, beam) point so the full trade-off curve is in
-the CSV; the summary row reports QPS at the 0.9-recall operating point.
+  * ``serve_E{1,4}`` — the device-resident multi-expansion serving path
+    (``ServingIndex``: prepacked graph/points/norms, sort-free rank
+    merges, early exit) at expansion widths 1 and 4,
+  * ``single``      — the legacy one-expansion-per-step double-sort scan
+    (``beam_search_single``), the pre-ServingIndex baseline,
+  * ``np_oracle``   — the pointer-chasing numpy reference, timed on a
+    query subset (it is per-query host code by design).
+
+Emits one row per (index, engine, beam) point so the full trade-off curve
+is in the CSV; the summary rows report QPS at the 0.9-recall operating
+point, and everything is appended to BENCH_qps.json
+(``common.append_bench_json``) so the serving trajectory is tracked
+across PRs — including the multi-expansion-vs-single-expansion speedup.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (Row, dataset, ground_truth, qps_at_recall,
-                               timed)
+from benchmarks.common import (BENCH_QPS_JSON, Row, append_bench_json,
+                               dataset, ground_truth, qps_at_recall, timed)
 from repro.core import pipnn
 from repro.core.baselines.vamana import VamanaParams, build_vamana
-from repro.core.beam_search import recall_at_k
+from repro.core.beam_search import beam_search_np, pad_ids, recall_at_k
 from repro.core.leaf import LeafParams
 from repro.core.pipnn import PiPNNParams
 from repro.core.rbc import RBCParams
+from repro.core.serving import ServingIndex
 
 N, D = 4096, 32
+NP_QUERIES = 32   # subset for timing the per-query host oracle
 
 
 def run() -> list[Row]:
@@ -27,6 +41,7 @@ def run() -> list[Row]:
     x, q = dataset(N, D)
     truth = ground_truth(N, D)
     rows: list[Row] = []
+    records: list[dict] = []
 
     indexes = {}
     for reps in (1, 2):
@@ -41,22 +56,64 @@ def run() -> list[Row]:
     xj, qj = jnp.asarray(x), jnp.asarray(q)
     for name, (graph, start) in indexes.items():
         gj = jnp.asarray(graph)
-        for beam in (8, 16, 32, 64):
-            fn = lambda: bs.beam_search_batch(gj, xj, qj, start=start,
-                                              beam=beam, iters=beam + 4)
-            (ids, _), _ = timed(fn)
-            (ids, _), secs = timed(fn, repeat=3)
-            # beam < 10 returns [Q, beam]: pad to [Q, 10] with -1 so this
-            # stays an honest 10@10 number (missing neighbors count as misses)
-            ids = np.asarray(ids)[:, :10]
-            if ids.shape[1] < 10:
-                ids = np.pad(ids, ((0, 0), (0, 10 - ids.shape[1])),
-                             constant_values=-1)
-            r = recall_at_k(ids, truth[:, :10], 10)
-            rows.append((f"qps_recall/{name}/beam{beam}",
-                         secs / q.shape[0] * 1e6,
-                         f"recall={r:.3f} qps={q.shape[0] / secs:.0f}"))
-        qps, r, beam = qps_at_recall(graph, start, x, q, truth, target=0.9)
-        rows.append((f"qps_recall/{name}/at0.9", 1e6 / max(qps, 1e-9),
-                     f"qps={qps:.0f} recall={r:.3f} beam={beam}"))
+        sv = ServingIndex.from_graph(graph, x, start)
+        engines = {
+            "serve_E1": lambda beam: sv.search(q, k=10, beam=beam,
+                                               expansions=1),
+            "serve_E4": lambda beam: sv.search(q, k=10, beam=beam,
+                                               expansions=4),
+            "single": lambda beam: np.asarray(bs.beam_search_single(
+                gj, xj, qj, start=start, beam=beam, iters=beam + 4)[0]),
+        }
+        at09 = {}
+        for ename, efn in engines.items():
+            for beam in (8, 16, 32, 64):
+                ids, _ = timed(efn, beam)
+                ids, secs = timed(efn, beam, repeat=3)
+                # -1 padding keeps beam<10 an honest 10@10 number
+                r = recall_at_k(pad_ids(ids, 10), truth[:, :10], 10)
+                qps = q.shape[0] / secs
+                rows.append((f"qps_recall/{name}/{ename}/beam{beam}",
+                             secs / q.shape[0] * 1e6,
+                             f"recall={r:.3f} qps={qps:.0f}"))
+                records.append({"index": name, "engine": ename, "beam": beam,
+                                "recall": round(r, 4), "qps": round(qps, 1)})
+            qps, r, beam = qps_at_recall(
+                graph, start, x, q, truth, target=0.9, search_ids_fn=efn)
+            at09[ename] = (qps, r, beam)
+            rows.append((f"qps_recall/{name}/{ename}/at0.9",
+                         1e6 / max(qps, 1e-9),
+                         f"qps={qps:.0f} recall={r:.3f} beam={beam}"))
+            records.append({"index": name, "engine": ename, "at": 0.9,
+                            "beam": beam, "recall": round(r, 4),
+                            "qps": round(qps, 1)})
+        # the acceptance delta: multi-expansion serving vs the legacy scan
+        speedup = at09["serve_E4"][0] / max(at09["single"][0], 1e-9)
+        rows.append((f"qps_recall/{name}/serve_vs_single_at0.9", 0.0,
+                     f"speedup={speedup:.2f}x"))
+        records.append({"index": name, "metric_name": "serve_vs_single_at0.9",
+                        "speedup": round(speedup, 2)})
+        # np pointer-chasing oracle on a subset (recall parity + QPS scale)
+        op_beam = at09["serve_E4"][2]
+        qs = q[:NP_QUERIES]
+
+        def run_np():
+            out = np.full((NP_QUERIES, 10), -1, dtype=np.int64)
+            for i, qq in enumerate(qs):
+                ids, _, _ = beam_search_np(graph, x, qq, start=start,
+                                           beam=op_beam)
+                out[i, : min(10, len(ids))] = ids[:10]
+            return out
+
+        ids_np, secs = timed(run_np)
+        r_np = recall_at_k(ids_np, truth[:NP_QUERIES, :10], 10)
+        qps_np = NP_QUERIES / secs
+        rows.append((f"qps_recall/{name}/np_oracle/beam{op_beam}",
+                     secs / NP_QUERIES * 1e6,
+                     f"recall={r_np:.3f} qps={qps_np:.0f}"))
+        records.append({"index": name, "engine": "np_oracle", "beam": op_beam,
+                        "recall": round(r_np, 4), "qps": round(qps_np, 1),
+                        "n_queries": NP_QUERIES})
+    append_bench_json(records, path=BENCH_QPS_JSON, bench="qps_recall",
+                      n=N, d=D, n_queries=q.shape[0])
     return rows

@@ -18,7 +18,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core import pipnn
-from repro.core.beam_search import brute_force_knn, recall_at_k
+from repro.core.beam_search import brute_force_knn, pad_ids, recall_at_k
 from repro.data.pipeline import VectorPipelineConfig, make_queries, make_vectors
 
 Row = tuple[str, float, str]
@@ -39,22 +39,26 @@ def ground_truth(n: int, d: int, seed: int = 0, k: int = 10,
 
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_build.json"
+BENCH_QPS_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_qps.json"
 
 
-def append_bench_json(records: list[dict], **meta) -> None:
-    """Append one run's records to BENCH_build.json (list of run dicts) so
-    the perf trajectory is tracked across PRs.  ``meta`` (n, d, bench, ...)
-    is stored alongside the records."""
+def append_bench_json(records: list[dict], path: pathlib.Path | None = None,
+                      **meta) -> None:
+    """Append one run's records to a bench-history JSON (list of run dicts)
+    so the perf trajectory is tracked across PRs.  ``path`` defaults to
+    BENCH_build.json; the serving benches write BENCH_qps.json.  ``meta``
+    (n, d, bench, ...) is stored alongside the records."""
+    path = BENCH_JSON if path is None else path
     history = []
-    if BENCH_JSON.exists():
+    if path.exists():
         try:
-            history = json.loads(BENCH_JSON.read_text())
+            history = json.loads(path.read_text())
         except (json.JSONDecodeError, OSError):
             history = []
         if not isinstance(history, list):
             history = []
     history.append({**meta, "records": records})
-    BENCH_JSON.write_text(json.dumps(history, indent=1))
+    path.write_text(json.dumps(history, indent=1))
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw):
@@ -93,21 +97,25 @@ def graph_recall(graph: np.ndarray, start: int, x: np.ndarray,
 def qps_at_recall(graph: np.ndarray, start: int, x: np.ndarray,
                   q: np.ndarray, truth: np.ndarray, *,
                   target: float = 0.9, metric: str = "l2",
-                  beams=(8, 16, 24, 32, 48, 64, 96, 128)) -> tuple[float, float, int]:
+                  beams=(8, 16, 24, 32, 48, 64, 96, 128),
+                  search_ids_fn=None) -> tuple[float, float, int]:
     """Sweep beam widths; return (QPS, recall, beam) at the first beam
-    reaching ``target`` recall (or the best seen)."""
-    import jax.numpy as jnp
+    reaching ``target`` recall (or the best seen).
 
-    from repro.core import beam_search as bs
+    ``search_ids_fn(beam) -> ids [Q, >=10]`` overrides the engine; the
+    default packs a ``ServingIndex`` once and runs the multi-expansion
+    serving path (what ``pipnn.search`` uses)."""
+    if search_ids_fn is None:
+        from repro.core.serving import ServingIndex
 
-    gj, xj, qj = jnp.asarray(graph), jnp.asarray(x), jnp.asarray(q)
+        sv = ServingIndex.from_graph(graph, x, start, metric=metric)
+        search_ids_fn = lambda beam: sv.search(q, k=10, beam=beam)
     best = (0.0, 0.0, beams[-1])
     for beam in beams:
-        fn = lambda: bs.beam_search_batch(gj, xj, qj, start=start, beam=beam,
-                                          iters=beam + 4, metric=metric)
-        (ids, _), _ = timed(fn)                      # warm-up/compile
-        (ids, _), secs = timed(fn, repeat=3)
-        r = recall_at_k(np.asarray(ids)[:, :10], truth[:, :10], 10)
+        fn = lambda: search_ids_fn(beam)
+        ids, _ = timed(fn)                           # warm-up/compile
+        ids, secs = timed(fn, repeat=3)
+        r = recall_at_k(pad_ids(ids, 10), truth[:, :10], 10)
         qps = q.shape[0] / max(secs, 1e-9)
         best = (qps, r, beam)
         if r >= target:

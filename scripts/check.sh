@@ -15,6 +15,10 @@
 #    build's recall must be at parity with the recursive RBC baseline
 #    (device-vs-host ball_carve bit-identity is covered by the partition
 #    suite in step 2)
+# 5. QPS smoke: the device-resident multi-expansion serving path must have
+#    a recall>=0.9 operating point, reach >= 2x the legacy single-expansion
+#    engine's QPS there, stay at recall parity with the beam_search_np
+#    pointer-chasing oracle, and the run is appended to BENCH_qps.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -93,6 +97,63 @@ for execution in ("host", "static"):
 print(f"  recall: rbc={recalls['host']:.3f} static={recalls['static']:.3f}")
 assert recalls["static"] >= recalls["host"] - 0.03, recalls
 print("stage-1 smoke OK")
+EOF
+
+echo "== smoke: serving QPS (multi-expansion vs legacy single-expansion) =="
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_QPS_JSON, append_bench_json, timed
+from repro.core import pipnn
+from repro.core import beam_search as bs
+from repro.core.beam_search import brute_force_knn, recall_at_k
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+from repro.core.serving import ServingIndex
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+q = x[:128] + 0.01 * rng.standard_normal((128, 32)).astype(np.float32)
+truth = brute_force_knn(x, q, 10)
+p = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3, 2)),
+                leaf=LeafParams(k=2), l_max=32, max_deg=16, seed=1)
+idx = pipnn.build(x, p)
+sv = pipnn.serving_index(idx, x)
+gj, xj, qj = sv.graph, sv.points, jnp.asarray(q)
+
+def sweep(fn):
+    """First (beam, recall, qps) with recall >= 0.9."""
+    for beam in (8, 16, 24, 32, 48, 64):
+        ids, _ = timed(fn, beam)                 # warm-up/compile
+        ids, secs = timed(fn, beam, repeat=3)
+        r = recall_at_k(np.asarray(ids)[:, :10], truth, 10)
+        if r >= 0.9:
+            return beam, r, q.shape[0] / secs
+    raise AssertionError("no recall>=0.9 operating point found")
+
+b_m, r_m, qps_m = sweep(lambda beam: sv.search(q, k=10, beam=beam))
+b_s, r_s, qps_s = sweep(lambda beam: np.asarray(bs.beam_search_single(
+    gj, xj, qj, start=idx.start, beam=beam, iters=beam + 4)[0]))
+# np pointer-chasing oracle: recall parity at the serving operating point
+ids_np = pipnn.search(idx, x, q[:32], k=10, beam=b_m, batch=False)
+r_np = recall_at_k(ids_np, truth[:32], 10)
+speedup = qps_m / max(qps_s, 1e-9)
+print(f"  serving  beam={b_m} recall={r_m:.3f} qps={qps_m:.0f}")
+print(f"  single   beam={b_s} recall={r_s:.3f} qps={qps_s:.0f}")
+print(f"  np-oracle recall={r_np:.3f} (beam={b_m});  speedup={speedup:.2f}x")
+assert r_m >= r_np - 0.05, (r_m, r_np)
+assert speedup >= 2.0, f"serving only {speedup:.2f}x the legacy engine"
+append_bench_json(
+    [{"engine": "serve_E4", "beam": b_m, "recall": round(r_m, 4),
+      "qps": round(qps_m, 1)},
+     {"engine": "single", "beam": b_s, "recall": round(r_s, 4),
+      "qps": round(qps_s, 1)},
+     {"engine": "np_oracle", "beam": b_m, "recall": round(r_np, 4)},
+     {"metric_name": "serve_vs_single_at0.9", "speedup": round(speedup, 2)}],
+    path=BENCH_QPS_JSON, bench="qps_smoke", n=2000, d=32, n_queries=128)
+print("serving QPS smoke OK")
 EOF
 
 echo "ALL CHECKS PASSED"

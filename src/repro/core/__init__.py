@@ -9,12 +9,15 @@ from repro.core.hashprune import (
     reservoir_init,
 )
 from repro.core.leaf import EdgeList, LeafParams, build_leaf_edges
-from repro.core.pipnn import PiPNNIndex, PiPNNParams, build, search
+from repro.core.pipnn import (PiPNNIndex, PiPNNParams, build, search,
+                              serving_index)
 from repro.core.rbc import RBCParams, ball_carve, leaves_to_padded, partition
+from repro.core.serving import ServingIndex
 
 __all__ = [
     "Reservoir", "hashprune_batch", "hashprune_flat", "hashprune_merge",
     "hashprune_merge_flat", "hashprune_stream", "reservoir_init", "EdgeList",
     "LeafParams", "build_leaf_edges", "PiPNNIndex", "PiPNNParams", "build",
-    "search", "RBCParams", "ball_carve", "leaves_to_padded", "partition",
+    "search", "serving_index", "ServingIndex", "RBCParams", "ball_carve",
+    "leaves_to_padded", "partition",
 ]

@@ -1,19 +1,33 @@
 """Beam search over a navigation graph (Algorithm 1) — the query path.
 
-Two implementations:
+Three implementations:
 
   * ``beam_search_np``  — faithful pointer-chasing reference (numpy).  This is
     the latency-bound pattern whose *elimination from construction* is the
-    paper's whole point; we keep it for querying (recall/QPS measurement).
-  * ``beam_search_batch`` — fixed-shape, fully-jittable batched variant
-    (vmapped over queries).  State per query: a beam of (dist, id, visited)
-    triples maintained by sort; each step visits the best unvisited node,
-    merges its <=R neighbors, dedupes by id, truncates to L.  Termination is
-    a fixed iteration budget (beam width L bounds useful steps).  This is the
-    TPU-shaped serving path.
+    paper's whole point; we keep it as the recall/parity oracle.
+  * ``beam_search_single`` — the original fixed-shape batched port: one
+    expansion per iteration per query, two full ``lax.sort``s of length
+    ``beam + R`` per step, fixed ``iters`` budget.  Retained as the perf
+    baseline (``bench_qps_recall`` measures the multi-expansion speedup
+    against it) and as a second agreement oracle.
+  * ``beam_search_batch`` — the serving engine: **multi-expansion** beam
+    search.  Each step selects the ``E`` best unvisited beam entries at
+    once, gathers their ``E*R`` neighbors, computes the whole ``[Q, E*R]``
+    distance block in one shot (optionally via the fused Pallas
+    gather-distance kernel), then folds the new candidates into the
+    always-sorted beam with SORT-FREE rank-based bounded merges (one per
+    expanded row) — the ``hashprune_merge_segmented`` Pallas-row-merge
+    trick: neither the beam nor the candidates ever enter a ``lax.sort``
+    (profiling showed XLA CPU's variadic sort dominating the old engine).
+    Visited state is carried as per-slot flags that survive the merge.
+    The loop is a ``lax.while_loop`` with per-query convergence ("every
+    live beam entry visited") and the ``iters`` budget as backstop; it
+    returns per-query hop and distance-computation telemetry.
 
 Graphs are padded adjacency matrices [n, R] int32 with -1 padding (plus an
-optional medoid entry point, the standard Vamana choice).
+optional medoid entry point, the standard Vamana choice).  For repeated
+queries against one index use ``core/serving.ServingIndex`` (what
+``pipnn.search`` does), which prepacks graph/points/norms on device once.
 """
 from __future__ import annotations
 
@@ -24,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as _metrics
+from repro.kernels import ref as _ref
 
 
 def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
@@ -92,7 +107,7 @@ def beam_search_np(
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "iters", "metric"))
-def beam_search_batch(
+def beam_search_single(
     graph: jax.Array,   # [n, R] int32, -1 pad
     x: jax.Array,       # [n, d]
     queries: jax.Array,  # [Q, d]
@@ -102,7 +117,13 @@ def beam_search_batch(
     iters: int,
     metric: str = "l2",
 ) -> tuple[jax.Array, jax.Array]:
-    """Batched fixed-iteration beam search.  Returns (ids, dists) [Q, beam]."""
+    """Single-expansion fixed-iteration beam search (the legacy engine).
+
+    Expands ONE vertex per step per query and pays two full sorts of
+    length ``beam + R`` per step; no convergence check.  Kept as the
+    baseline the multi-expansion engine is benchmarked against.
+    Returns (ids, dists) [Q, beam].
+    """
     n, r = graph.shape
     inf = jnp.float32(jnp.inf)
 
@@ -156,13 +177,244 @@ def beam_search_batch(
     return jax.vmap(one)(queries)
 
 
+# ---------------------------------------------------------------------------
+# Multi-expansion serving engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beam", "iters", "metric", "expansions", "early_exit",
+                     "use_pallas", "interpret"),
+)
+def _beam_search_multi(
+    graph: jax.Array,    # [n, R] int32, -1 pad
+    x: jax.Array,        # [n, d] (f32 or downcast; distances computed in f32)
+    norms: jax.Array,    # [n] f32 metric-dependent point norms (metrics.point_norms)
+    queries: jax.Array,  # [Q, d]
+    start,               # scalar entry point (dynamic)
+    *,
+    beam: int,
+    iters: int,
+    metric: str,
+    expansions: int,
+    early_exit: bool,
+    use_pallas: bool,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched multi-expansion beam search core.
+
+    Returns (ids [Q, beam], dists [Q, beam], hops [Q], dist_comps [Q]).
+    ``hops`` counts vertices expanded, ``dist_comps`` distance evaluations
+    (including the entry point).  See ``beam_search_batch`` for semantics.
+    """
+    n, r = graph.shape
+    nq = queries.shape[0]
+    e = max(1, min(int(expansions), beam))
+    c = e * r
+    inf = jnp.float32(jnp.inf)
+    q32 = queries.astype(jnp.float32)
+
+    if use_pallas:
+        from repro.kernels.gather_distance import gather_distance
+
+        dist_fn = functools.partial(gather_distance, interpret=interpret)
+    else:
+        dist_fn = _ref.gather_distance_ref
+
+    d0 = dist_fn(x, norms, q32,
+                 jnp.full((nq, 1), start, dtype=jnp.int32), metric=metric)[:, 0]
+    ids = jnp.full((nq, beam), -1, jnp.int32).at[:, 0].set(start)
+    ds = jnp.full((nq, beam), inf).at[:, 0].set(d0)
+    vis = jnp.zeros((nq, beam), dtype=bool)
+    hops = jnp.zeros((nq,), jnp.int32)
+    comps = jnp.ones((nq,), jnp.int32)     # the entry-point distance
+
+    rows = jnp.arange(nq)[:, None]
+    iota_l = jnp.arange(beam, dtype=jnp.int32)
+    lt = lambda d1, i1, d2, i2: (d1 < d2) | ((d1 == d2) & (i1 < i2))
+
+    def merge_block(ids, ds, vis, bids, bds):
+        """Fold one [Q, M] candidate block into the sorted beam.
+
+        Rank-based bounded merge — the ``hashprune_merge_segmented``
+        Pallas-row-merge trick, with NO sort anywhere (XLA CPU's variadic
+        sort is the old engine's dominant cost): after deduping, ids are
+        disjoint so (dist, id) keys are strictly ordered and every valid
+        entry's output slot is its rank on its own side plus the count of
+        smaller keys on the other side.  The beam's own rank is its slot
+        index (it stays sorted across merges); the block's comes from one
+        M^2 lex compare.  Visited flags ride along on the beam side; new
+        entries arrive unvisited; slots past the merged count keep the
+        (-1, inf, unvisited) pad.
+        """
+        m = bids.shape[1]
+        iota_m = jnp.arange(m, dtype=jnp.int32)
+        # dedupe: duplicate candidate ids carry identical dists (same
+        # point, same query, same formula) so keeping the first copy is
+        # exact; ids already in the beam keep the beam's (flagged) copy
+        dup = jnp.any((bids[:, :, None] == bids[:, None, :])
+                      & (iota_m[None, :] < iota_m[:, None])[None], axis=2)
+        beam_ids = jnp.where(ids >= 0, ids, -2)  # don't match -1 candidates
+        member = jnp.any(bids[:, :, None] == beam_ids[:, None, :], axis=2)
+        bds = jnp.where(dup | member | (bids < 0), inf, bds)
+        va = jnp.isfinite(ds)                    # [Q, L]
+        vb = jnp.isfinite(bds)                   # [Q, M]
+        b_lt_b = lt(bds[:, None, :], bids[:, None, :],
+                    bds[:, :, None], bids[:, :, None])      # [Q, M, M']
+        rank_b = jnp.sum(vb[:, None, :] & b_lt_b, axis=2, dtype=jnp.int32)
+        b_lt_a = lt(bds[:, None, :], bids[:, None, :],
+                    ds[:, :, None], ids[:, :, None])        # [Q, L, M]
+        pos_a = jnp.where(va, iota_l[None, :] + jnp.sum(
+            vb[:, None, :] & b_lt_a, axis=2, dtype=jnp.int32), beam)
+        pos_b = jnp.where(vb, rank_b + jnp.sum(
+            va[:, :, None] & ~b_lt_a, axis=1, dtype=jnp.int32), beam)
+        # distinct ranks for every valid entry => at most one source per
+        # output slot; positions >= beam fall off the end (the truncation)
+        oh_a = pos_a[:, None, :] == iota_l[None, :, None]   # [Q, L_out, L]
+        oh_b = pos_b[:, None, :] == iota_l[None, :, None]   # [Q, L_out, M]
+        pick_a = jnp.any(oh_a, axis=2)
+        pick_b = jnp.any(oh_b, axis=2)
+        sum_a = lambda v: jnp.sum(jnp.where(oh_a, v[:, None, :], 0), axis=2)
+        sum_b = lambda v: jnp.sum(jnp.where(oh_b, v[:, None, :], 0), axis=2)
+        new_ids = jnp.where(pick_a, sum_a(ids),
+                            jnp.where(pick_b, sum_b(bids), -1))
+        new_ds = jnp.where(pick_a, sum_a(ds),
+                           jnp.where(pick_b, sum_b(bds), inf))
+        new_vis = jnp.any(oh_a & vis[:, None, :], axis=2)
+        return new_ids, new_ds, new_vis
+
+    def cond(state):
+        t, ids, ds, vis, _, _ = state
+        live = jnp.any(~vis & (ids >= 0) & jnp.isfinite(ds))
+        budget = t < iters
+        return budget & live if early_exit else budget
+
+    def body(state):
+        t, ids, ds, vis, hops, comps = state
+        # --- select the E best unvisited beam entries per query -----------
+        masked = jnp.where(vis | (ids < 0), inf, ds)
+        negv, pos = jax.lax.top_k(-masked, e)           # [Q, E] beam slots
+        valid_e = jnp.isfinite(negv)
+        vis = vis.at[rows, pos].set(True)
+        p = jnp.take_along_axis(ids, pos, axis=1)       # [Q, E]
+        # --- gather their E*R neighbors + one-shot distance block ---------
+        nbr = graph[jnp.maximum(jnp.where(valid_e, p, -1), 0)]   # [Q, E, R]
+        ok = (nbr >= 0) & valid_e[:, :, None]
+        cids = jnp.where(ok, nbr, -1).reshape(nq, c)
+        cds = dist_fn(x, norms, q32, cids, metric=metric)        # [Q, C]
+        hops = hops + jnp.sum(valid_e, axis=1, dtype=jnp.int32)
+        comps = comps + jnp.sum(cids >= 0, axis=1, dtype=jnp.int32)
+        # --- fold the E neighbor rows into the beam, one bounded merge
+        # per row: total merge work scales LINEARLY in E (each row merge
+        # is O(R^2 + R*L) compares) while the distance block, expansion
+        # selection and loop-carry costs amortize over E expansions
+        for j in range(e):
+            sl = slice(j * r, (j + 1) * r)
+            ids, ds, vis = merge_block(ids, ds, vis, cids[:, sl], cds[:, sl])
+        return (t + 1, ids, ds, vis, hops, comps)
+
+    state = (jnp.int32(0), ids, ds, vis, hops, comps)
+    _, ids, ds, vis, hops, comps = jax.lax.while_loop(cond, body, state)
+    return ids, ds, hops, comps
+
+
+def beam_search_batch(
+    graph,
+    x,
+    queries,
+    *,
+    start: int,
+    beam: int,
+    iters: int | None = None,
+    metric: str = "l2",
+    expansions: int = 4,
+    norms=None,
+    early_exit: bool = True,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    with_stats: bool = False,
+):
+    """Batched multi-expansion beam search.  Returns (ids, dists) [Q, beam].
+
+    Each step expands the ``expansions`` best unvisited beam entries at
+    once: their ``expansions * R`` neighbors are gathered and scored in one
+    distance block (the fused Pallas gather-distance kernel when
+    ``use_pallas``; auto-enabled on TPU when the points fit VMEM), then
+    folded into the always-sorted beam via sort-free rank-based bounded
+    merges, one per expanded row — the per-step selection, distance
+    dispatch and loop-carry costs are amortized over ``E*R`` candidates
+    while each row merge stays O(R^2 + R*beam) compares.
+
+    ``iters`` is a CAP, not a schedule: the loop runs under
+    ``lax.while_loop`` and exits as soon as every query has converged
+    (all live beam entries visited — exactly the np reference's
+    termination), so a generous cap costs nothing.  ``iters=None``
+    defaults to ``beam + 4`` (the legacy budget; with early exit the
+    typical hop count is ~``beam / expansions``).  ``early_exit=False``
+    forces the full cap (the converged state is a fixed point, so results
+    are identical — tested).
+
+    ``norms`` are the metric-dependent point norms
+    (``metrics.point_norms``); pass the precomputed array to skip the
+    per-call reduction (``ServingIndex`` does).  ``with_stats=True``
+    additionally returns per-query telemetry (hops, dist_comps).
+    """
+    graph = jnp.asarray(graph)
+    x = jnp.asarray(x)
+    queries = jnp.asarray(queries)
+    if iters is None:
+        iters = beam + 4
+    if use_pallas is None or interpret is None:
+        on_tpu = jax.default_backend() == "tpu"
+        if use_pallas is None:
+            from repro.kernels.gather_distance import fits_vmem
+
+            use_pallas = on_tpu and fits_vmem(x)
+        if interpret is None:
+            interpret = not on_tpu
+    if norms is None:
+        norms = _metrics.point_norms(x, metric)
+    ids, ds, hops, comps = _beam_search_multi(
+        graph, x, jnp.asarray(norms), queries, start,
+        beam=beam, iters=int(iters), metric=metric,
+        expansions=int(expansions), early_exit=bool(early_exit),
+        use_pallas=bool(use_pallas), interpret=bool(interpret),
+    )
+    if with_stats:
+        return ids, ds, hops, comps
+    return ids, ds
+
+
+def pad_ids(ids: np.ndarray, k: int) -> np.ndarray:
+    """Truncate / -1-pad a [Q, *] id matrix to exactly [Q, k].
+
+    The shared miss-counting convention: a row with fewer than ``k``
+    neighbors (e.g. ``beam < k``) is padded with -1, which can never match
+    ground truth — ``recall_at_k`` then counts the gap as misses."""
+    ids = np.asarray(ids)[:, :k]
+    if ids.shape[1] < k:
+        ids = np.pad(ids, ((0, 0), (0, k - ids.shape[1])),
+                     constant_values=-1)
+    return ids
+
+
 def recall_at_k(
     found: np.ndarray, truth: np.ndarray, k: int = 10
 ) -> float:
-    """Mean k@k recall (Definition 2) over queries."""
-    hits = 0
-    for f, t in zip(found, truth):
-        hits += len(set(f[:k].tolist()) & set(t[:k].tolist()))
+    """Mean k@k recall (Definition 2) over queries.
+
+    Vectorized set intersection: a found entry scores iff it appears
+    anywhere in the truth row AND is the first occurrence of its value in
+    the found row (set semantics — duplicates count once, exactly like the
+    original per-row ``set`` intersection).
+    """
+    f = np.asarray(found)[:, :k]
+    t = np.asarray(truth)[:, :k]
+    kf = f.shape[1]
+    earlier = np.tril(np.ones((kf, kf), dtype=bool), -1)      # j' < j
+    dup = np.any((f[:, :, None] == f[:, None, :]) & earlier[None], axis=2)
+    in_t = np.any(f[:, :, None] == t[:, None, :], axis=2)
+    hits = int(np.sum(in_t & ~dup))
     return hits / (len(found) * k)
 
 

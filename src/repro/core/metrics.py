@@ -53,3 +53,20 @@ def point_to_points(q: jax.Array, xs: jax.Array, metric: Metric = "l2") -> jax.A
 @functools.partial(jax.jit, static_argnames=("metric",))
 def pairwise_jit(a: jax.Array, b: jax.Array, metric: Metric = "l2") -> jax.Array:
     return pairwise(a, b, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def point_norms(x: jax.Array, metric: Metric = "l2") -> jax.Array:
+    """Metric-dependent per-point norms used by the gather-distance path
+    (``kernels.ref.gather_distance_ref`` / the Pallas kernel): squared L2
+    norms for ``l2``, L2 norms for ``cosine``, zeros for ``mips`` (unused).
+    Always f32 — compute these BEFORE any points-dtype downcast so the
+    norm half of the expansion keeps full precision.
+    """
+    _check(metric)
+    x32 = x.astype(jnp.float32)
+    if metric == "cosine":
+        return jnp.linalg.norm(x32, axis=-1)
+    if metric == "l2":
+        return jnp.sum(x32 * x32, axis=-1)
+    return jnp.zeros((x.shape[0],), jnp.float32)

@@ -1,0 +1,152 @@
+"""Device-resident query serving: the PiPNN index packed for heavy traffic.
+
+``pipnn.search`` used to re-upload the graph and the points to the device
+on EVERY call (``jnp.asarray(index.graph)`` / ``jnp.asarray(x)``) and then
+run the single-expansion beam search.  ``ServingIndex`` is the serving-side
+counterpart of the device-resident build: it prepacks everything the query
+path touches as device arrays ONCE —
+
+  * ``graph``  [n, R] int32 adjacency (−1 padded),
+  * ``points`` [n, d], optionally downcast (e.g. ``jnp.bfloat16``) to halve
+    the serving footprint; distances still accumulate in f32,
+  * ``norms``  [n] f32 metric-dependent point norms
+    (``metrics.point_norms``) computed BEFORE the downcast, so the norm
+    half of the distance expansion keeps full precision,
+  * ``start``  entry point —
+
+and routes queries through the multi-expansion beam search engine
+(``beam_search.beam_search_batch``): per step the ``expansions`` best
+unvisited beam entries are expanded at once, their neighbor distances are
+computed as one ``[Q, E*R]`` block (the fused Pallas gather-distance
+kernel on TPU when the points fit VMEM), and the loop early-exits per
+batch as soon as every query's live beam is fully visited (``iters`` is
+only a backstop cap).  After construction a ``search`` call transfers
+nothing but the queries.
+
+``pipnn.search`` caches one ``ServingIndex`` per (index, dataset) behind
+the scenes; hold your own instance for long-lived serving processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as _metrics
+
+
+@dataclasses.dataclass
+class ServingIndex:
+    graph: jax.Array          # [n, R] int32, -1 padded, device-resident
+    points: jax.Array         # [n, d] device-resident (possibly downcast)
+    norms: jax.Array          # [n] f32 point norms (metrics.point_norms)
+    start: int                # entry point (medoid)
+    metric: str = "l2"
+
+    @property
+    def n(self) -> int:
+        return self.graph.shape[0]
+
+    @property
+    def degree_bound(self) -> int:
+        return self.graph.shape[1]
+
+    def device_bytes(self) -> int:
+        """Actual device-resident footprint of the packed index."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.graph, self.points, self.norms))
+
+    @classmethod
+    def from_graph(
+        cls,
+        graph: np.ndarray,
+        x: np.ndarray,
+        start: int,
+        *,
+        metric: str = "l2",
+        dtype=None,
+    ) -> "ServingIndex":
+        """Pack an adjacency matrix + points for serving.  ``dtype`` (e.g.
+        ``jnp.bfloat16``) downcasts the device points copy; norms are
+        computed in f32 first."""
+        gj = jnp.asarray(np.ascontiguousarray(graph), dtype=jnp.int32)
+        xj = jnp.asarray(np.ascontiguousarray(x, dtype=np.float32))
+        norms = _metrics.point_norms(xj, metric)
+        if dtype is not None:
+            xj = xj.astype(dtype)
+        return cls(graph=gj, points=xj, norms=norms, start=int(start),
+                   metric=metric)
+
+    @classmethod
+    def from_index(cls, index, x: np.ndarray, *, dtype=None) -> "ServingIndex":
+        """Pack a ``PiPNNIndex`` (or any object with ``.graph``, ``.start``
+        and ``.params.metric``) over its dataset ``x``."""
+        return cls.from_graph(index.graph, x, index.start,
+                              metric=index.params.metric, dtype=dtype)
+
+    def search(
+        self,
+        queries: np.ndarray,
+        *,
+        k: int = 10,
+        beam: int = 32,
+        expansions: int = 4,
+        iters: int | None = None,
+        early_exit: bool = True,
+        use_pallas: bool | None = None,
+        interpret: bool | None = None,
+        query_chunk: int | None = None,
+        with_stats: bool = False,
+    ):
+        """Serve a query batch; returns [Q, k] neighbor ids (int64,
+        -1-padded when fewer than ``k`` are found, e.g. ``beam < k``).
+
+        ``expansions`` is the per-step expansion width ``E``; ``iters`` is
+        the backstop cap (default ``beam + 4``) — with ``early_exit`` the
+        loop stops as soon as every query converged, so raising the cap is
+        free.  ``query_chunk`` bounds the per-dispatch batch (chunks are
+        zero-padded to a fixed shape so every chunk reuses one compiled
+        executable).  ``with_stats=True`` also returns a dict with
+        per-query ``hops`` (vertices expanded) and ``dist_comps``
+        (distance evaluations) telemetry.
+        """
+        from repro.core import beam_search as _bs
+
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        nq = q.shape[0]
+        chunk = nq if not query_chunk else min(int(query_chunk), max(nq, 1))
+        ids_parts, hops_parts, comps_parts = [], [], []
+        for s in range(0, max(nq, 1), max(chunk, 1)):
+            qc = q[s : s + chunk]
+            pad = chunk - qc.shape[0]
+            if pad:
+                qc = np.pad(qc, ((0, pad), (0, 0)))
+            ids, _, hops, comps = _bs.beam_search_batch(
+                self.graph, self.points, qc,
+                start=self.start, beam=beam, iters=iters, metric=self.metric,
+                expansions=expansions, norms=self.norms,
+                early_exit=early_exit, use_pallas=use_pallas,
+                interpret=interpret, with_stats=True,
+            )
+            take = chunk - pad
+            ids_parts.append(np.asarray(ids)[:take])
+            hops_parts.append(np.asarray(hops)[:take])
+            comps_parts.append(np.asarray(comps)[:take])
+        ids = np.concatenate(ids_parts, axis=0) if ids_parts else \
+            np.empty((0, beam), np.int32)
+        # beam < k: -1-pad to [Q, k] like the np oracle path
+        out = _bs.pad_ids(ids, k).astype(np.int64)
+        if with_stats:
+            stats: dict[str, Any] = {
+                "hops": np.concatenate(hops_parts) if hops_parts else
+                        np.empty((0,), np.int32),
+                "dist_comps": np.concatenate(comps_parts) if comps_parts else
+                              np.empty((0,), np.int32),
+                "expansions": int(expansions),
+                "iters_cap": int(iters if iters is not None else beam + 4),
+            }
+            return out, stats
+        return out

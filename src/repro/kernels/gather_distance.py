@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused neighbor gather + distance block for serving.
+
+The multi-expansion beam search's per-step hot loop: given the ``E*R``
+neighbor ids each query just expanded, gather their vectors and compute the
+``[Q_tile, E*R]`` dissimilarity block in one pass.  Grid over query tiles;
+per step the kernel
+
+  * loads a ``[TQ, d]`` query tile and its ``[TQ, C]`` neighbor-id tile
+    into VMEM,
+  * gathers the ``TQ*C`` neighbor rows from the VMEM-resident points block,
+  * contracts queries against their gathered neighbors as a batched
+    matvec on the MXU (``dot_general`` with a batch dim, f32 accumulation),
+  * fuses the norm expansion using the PRECOMPUTED f32 point norms
+    (``metrics.point_norms`` — computed before any points-dtype downcast,
+    so a bf16 serving copy only rounds the inner-product term),
+  * writes +inf for ``-1``-padded ids.
+
+The points block is replicated to every grid step, so the compiler keeps
+one VMEM-resident copy: this kernel targets serving shards whose points
+fit VMEM (``fits_vmem``); larger shards use the XLA fallback
+(``kernels.ref.gather_distance_ref``), which streams the gather from HBM.
+``beam_search_batch(use_pallas=...)`` auto-enables it on TPU exactly like
+``edge_hash`` / ``segmented_merge``, and it is interpret-mode tested
+against the oracle on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+_TQ = 8  # query rows per grid step (f32 sublane tile)
+
+# points bytes budget for auto-enabling the VMEM-resident kernel (leave
+# headroom out of ~16 MB/core for the query/id/output tiles)
+_VMEM_POINTS_BUDGET = 8 * 1024 * 1024
+
+
+def fits_vmem(points: jax.Array, budget: int = _VMEM_POINTS_BUDGET) -> bool:
+    """True when the points block is small enough to keep VMEM-resident."""
+    return points.size * points.dtype.itemsize <= budget
+
+
+def _gather_distance_kernel(q_ref, ids_ref, pts_ref, n2_ref, o_ref, *,
+                            metric: str):
+    q = q_ref[...].astype(jnp.float32)          # [TQ, d]
+    ids = ids_ref[...]                          # [TQ, C]
+    tq, c = ids.shape
+    flat = jnp.maximum(ids.reshape(-1), 0)      # [TQ*C]
+    g = jnp.take(pts_ref[...], flat, axis=0).astype(jnp.float32)
+    g = g.reshape(tq, c, -1)                    # [TQ, C, d]
+    # batched matvec on the MXU: contract d, batch over the query row
+    ip = jax.lax.dot_general(
+        q, g, (((1,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )                                           # [TQ, C]
+    if metric == "mips":
+        d = -ip
+    else:
+        n2 = jnp.take(n2_ref[...].reshape(-1), flat).reshape(tq, c)
+        if metric == "cosine":
+            qn = jnp.sqrt(jnp.sum(q * q, axis=-1))
+            d = 1.0 - ip / jnp.maximum(qn[:, None] * n2, 1e-30)
+        else:
+            q2 = jnp.sum(q * q, axis=-1)
+            d = jnp.maximum(q2[:, None] + n2 - 2.0 * ip, 0.0)
+    o_ref[...] = jnp.where(ids >= 0, d, jnp.inf)
+
+
+def _pad(x, axis, mult, value):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tq", "interpret"))
+def gather_distance(
+    points: jax.Array,   # [n, d] (f32 or downcast serving copy)
+    norms: jax.Array,    # [n] f32 metric-dependent norms (metrics.point_norms)
+    queries: jax.Array,  # [Q, d]
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+    tq: int = _TQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused gather-distance block [Q, C] f32; +inf where ``nbr_ids < 0``.
+
+    Semantics identical to ``kernels.ref.gather_distance_ref`` (tested in
+    interpret mode on CPU).
+    """
+    nq, c = nbr_ids.shape
+    if nq == 0 or c == 0:
+        return jnp.full((nq, c), jnp.inf, jnp.float32)
+    points = _pad(_pad(points, 0, 8, 0), 1, LANE, 0)
+    norms = _pad(norms.astype(jnp.float32), 0, 8, 0.0).reshape(1, -1)
+    queries = _pad(_pad(queries, 0, tq, 0), 1, LANE, 0)
+    nbr_ids = _pad(_pad(nbr_ids, 0, tq, -1), 1, LANE, -1)
+    qp, dp = queries.shape
+    cp = nbr_ids.shape[1]
+    np_ = points.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_gather_distance_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.float32),
+        grid=(qp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, dp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((np_, dp), lambda r: (0, 0)),
+            pl.BlockSpec((1, norms.shape[1]), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+        interpret=interpret,
+    )(queries, nbr_ids, points, norms)
+    return out[:nq, :c]

@@ -86,6 +86,40 @@ def rowwise_topk_ref(
     return jnp.where(ok, si, -1), jnp.where(ok, sd, jnp.inf)
 
 
+def gather_distance_ref(
+    points: jax.Array,   # [n, d] (f32 or downcast)
+    norms: jax.Array,    # [n] f32 metric-dependent norms (metrics.point_norms)
+    queries: jax.Array,  # [Q, d]
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+) -> jax.Array:
+    """Fused gather + distance oracle for the serving path: [Q, C] f32.
+
+    ``out[q, c]`` is the dissimilarity between ``queries[q]`` and
+    ``points[nbr_ids[q, c]]`` (+inf where ``nbr_ids < 0``).  The point-side
+    norm term comes from the precomputed ``norms`` (f32, computed before
+    any dtype downcast of ``points``); the inner product is accumulated in
+    f32 regardless of the points dtype.
+    """
+    q32 = queries.astype(jnp.float32)
+    safe = jnp.maximum(nbr_ids, 0)
+    g = points[safe].astype(jnp.float32)                 # [Q, C, d]
+    # broadcast-multiply + reduce: XLA CPU lowers this far better than a
+    # batched-matvec einsum (the TPU path is the Pallas kernel's MXU
+    # dot_general; both accumulate in f32)
+    ip = jnp.sum(q32[:, None, :] * g, axis=-1)
+    if metric == "mips":
+        d = -ip
+    elif metric == "cosine":
+        qn = jnp.linalg.norm(q32, axis=-1)
+        d = 1.0 - ip / jnp.maximum(qn[:, None] * norms[safe], 1e-30)
+    else:
+        q2 = jnp.sum(q32 * q32, axis=-1)
+        d = jnp.maximum(q2[:, None] + norms[safe] - 2.0 * ip, 0.0)
+    return jnp.where(nbr_ids >= 0, d, jnp.inf)
+
+
 def sketch_hash_ref(
     x: jax.Array,           # [N, D] points
     hyperplanes: jax.Array,  # [M_BITS, D]

@@ -141,6 +141,63 @@ def test_edge_hash_range():
     assert (h >= 0).all() and (h < 2**12).all()
 
 
+# ------------------------------------------------------- gather-distance ---
+
+GD_SHAPES = [
+    (60, 4, 3, 5),        # tiny, heavy padding everywhere
+    (300, 32, 16, 128),   # serving-shaped: E*R = 128 lane-exact
+    (257, 17, 9, 65),     # ragged everything
+    (128, 128, 8, 256),   # exact tiles, wide candidate block
+]
+
+
+@pytest.mark.parametrize("n,d,q,c", GD_SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_matches_ref(n, d, q, c, metric):
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance
+
+    rng = np.random.default_rng(hash((n, d, q, c, metric)) % 2**31)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((q, d)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, n, (q, c)), dtype=jnp.int32)
+    norms = point_norms(x, metric)
+    got = gather_distance(x, norms, qs, ids, metric=metric, interpret=INTERP)
+    want = ref.gather_distance_ref(x, norms, qs, ids, metric=metric)
+    g, w = np.asarray(got), np.asarray(want)
+    mask = np.asarray(ids) >= 0
+    assert (np.isinf(g) == ~mask).all(), "-1 ids must map to +inf"
+    np.testing.assert_allclose(g[mask], w[mask], rtol=1e-5, atol=1e-5)
+
+
+def test_gather_distance_downcast_points():
+    """bf16 points: the norm half stays exact (precomputed f32), only the
+    inner product is rounded — kernel and oracle agree within bf16 tol."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance
+
+    rng = np.random.default_rng(0)
+    x32 = jnp.asarray(rng.standard_normal((200, 24)), dtype=jnp.float32)
+    norms = point_norms(x32, "l2")       # BEFORE the downcast
+    x16 = x32.astype(jnp.bfloat16)
+    qs = jnp.asarray(rng.standard_normal((7, 24)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 200, (7, 33)), dtype=jnp.int32)
+    got = gather_distance(x16, norms, qs, ids, metric="l2", interpret=INTERP)
+    want = ref.gather_distance_ref(x16, norms, qs, ids, metric="l2")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+    exact = ref.gather_distance_ref(x32, norms, qs, ids, metric="l2")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                               rtol=0.15, atol=0.3)
+
+
+def test_gather_distance_fits_vmem_budget():
+    from repro.kernels.gather_distance import fits_vmem
+
+    assert fits_vmem(jnp.zeros((1000, 32), jnp.float32))
+    assert not fits_vmem(jnp.zeros((1 << 20, 128), jnp.float32))
+
+
 # ----------------------------------------------- kernel-powered PiPNN build ---
 
 def test_full_build_with_flashknn_matches_jax_path():
