@@ -4,6 +4,10 @@ plus the serving-engine comparison the multi-expansion PR is about:
   * ``serve_E{1,4}`` — the device-resident multi-expansion serving path
     (``ServingIndex``: prepacked graph/points/norms, sort-free rank
     merges, early exit) at expansion widths 1 and 4,
+  * ``serve_i8``    — the same engine over the scalar-quantized int8
+    packing (int8 points + per-point f32 scales, exact norm terms); its
+    summary row records the recall delta vs f32 serving and the device
+    footprint of both packings,
   * ``single``      — the legacy one-expansion-per-step double-sort scan
     (``beam_search_single``), the pre-ServingIndex baseline,
   * ``np_oracle``   — the pointer-chasing numpy reference, timed on a
@@ -13,7 +17,8 @@ Emits one row per (index, engine, beam) point so the full trade-off curve
 is in the CSV; the summary rows report QPS at the 0.9-recall operating
 point, and everything is appended to BENCH_qps.json
 (``common.append_bench_json``) so the serving trajectory is tracked
-across PRs — including the multi-expansion-vs-single-expansion speedup.
+across PRs — including the multi-expansion-vs-single-expansion speedup
+and the int8-vs-f32 serving deltas.
 """
 from __future__ import annotations
 
@@ -57,13 +62,17 @@ def run() -> list[Row]:
     for name, (graph, start) in indexes.items():
         gj = jnp.asarray(graph)
         sv = ServingIndex.from_graph(graph, x, start)
+        sv8 = ServingIndex.from_graph(graph, x, start, dtype="int8")
         engines = {
             "serve_E1": lambda beam: sv.search(q, k=10, beam=beam,
                                                expansions=1),
             "serve_E4": lambda beam: sv.search(q, k=10, beam=beam,
                                                expansions=4),
+            "serve_i8": lambda beam: sv8.search(q, k=10, beam=beam,
+                                                expansions=4),
             "single": lambda beam: np.asarray(bs.beam_search_single(
-                gj, xj, qj, start=start, beam=beam, iters=beam + 4)[0]),
+                gj, xj, qj, start=start, beam=beam,
+                iters=bs.default_iters(beam))[0]),
         }
         at09 = {}
         for ename, efn in engines.items():
@@ -93,6 +102,18 @@ def run() -> list[Row]:
                      f"speedup={speedup:.2f}x"))
         records.append({"index": name, "metric_name": "serve_vs_single_at0.9",
                         "speedup": round(speedup, 2)})
+        # int8 serving deltas vs f32: recall at the operating points +
+        # device footprint of both packings
+        r_delta = at09["serve_E4"][1] - at09["serve_i8"][1]
+        qps_ratio = at09["serve_i8"][0] / max(at09["serve_E4"][0], 1e-9)
+        rows.append((f"qps_recall/{name}/int8_vs_f32_at0.9", 0.0,
+                     f"recall_delta={r_delta:.4f} qps_ratio={qps_ratio:.2f} "
+                     f"bytes={sv8.device_bytes()}/{sv.device_bytes()}"))
+        records.append({"index": name, "metric_name": "int8_vs_f32_at0.9",
+                        "recall_delta": round(r_delta, 4),
+                        "qps_ratio": round(qps_ratio, 2),
+                        "device_bytes_i8": sv8.device_bytes(),
+                        "device_bytes_f32": sv.device_bytes()})
         # np pointer-chasing oracle on a subset (recall parity + QPS scale)
         op_beam = at09["serve_E4"][2]
         qs = q[:NP_QUERIES]

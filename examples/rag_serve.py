@@ -8,18 +8,14 @@ Pipeline (the paper's RAG motivation, Sec. 1, realized):
      then prefill+decode generates the continuation.
 
   PYTHONPATH=src python examples/rag_serve.py --arch qwen2-7b \
-      --requests 8 --batch 4
+      --requests 8 --batch 4 --ann-dtype int8
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core import pipnn
-from repro.core.leaf import LeafParams
-from repro.core.pipnn import PiPNNParams
-from repro.core.rbc import RBCParams
-from repro.launch.serve import Server
+from repro.launch.serve import RETRIEVER_DTYPES, Retriever, Server
 
 DOC_LEN = 16
 
@@ -34,6 +30,9 @@ def main():
     ap.add_argument("--topk", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--ann-dtype", choices=RETRIEVER_DTYPES, default="f32",
+                    help="serving precision of the corpus copy; int8 = "
+                         "scalar-quantized packing (~1/4 the footprint)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -45,15 +44,13 @@ def main():
     corpus_emb = (centers[assign]
                   + 0.5 * rng.standard_normal((args.corpus, args.dim))
                   ).astype(np.float32)
-    index = pipnn.build(corpus_emb, PiPNNParams(
-        rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
-        leaf=LeafParams(k=2), metric="mips", max_deg=32,
-        # MIPS alpha-pruning over-sparsifies hub-structured graphs; keep
-        # the HashPrune reservoir as-is (standard DiskANN-MIPS practice)
-        final_prune=False, seed=0))
+    retriever = Retriever(corpus_emb, points_dtype=args.ann_dtype,
+                          metric="mips", seed=0)
     print(f"[index] {args.corpus} docs indexed in "
           f"{time.perf_counter() - t0:.2f}s "
-          f"(avg deg {index.average_degree():.1f})")
+          f"(avg deg {retriever.index.average_degree():.1f}, "
+          f"{args.ann_dtype} serving copy: "
+          f"{retriever.device_bytes() / 1e6:.2f} MB on device)")
 
     # --- 2. server --------------------------------------------------------
     max_len = args.topk * DOC_LEN + args.prompt_len + args.max_new
@@ -72,8 +69,7 @@ def main():
         prompts = rng.integers(0, server.vocab,
                                (b, args.prompt_len)).astype(np.int32)
         q_emb = (prompts / server.vocab) @ proj          # [b, dim]
-        hits = pipnn.search(index, corpus_emb,
-                            q_emb.astype(np.float32), k=args.topk, beam=32)
+        hits = retriever.retrieve(q_emb, k=args.topk, beam=32)
         aug = np.concatenate(
             [doc_tokens[hits.reshape(b, -1)].reshape(b, -1), prompts],
             axis=1)

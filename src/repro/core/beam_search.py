@@ -41,6 +41,15 @@ from repro.core import metrics as _metrics
 from repro.kernels import ref as _ref
 
 
+def default_iters(beam: int) -> int:
+    """Default backstop iteration cap for the serving engines: ``beam + 4``
+    (the legacy fixed budget).  Single-sourced here — the engine's
+    ``iters=None`` resolution and ``ServingIndex.search`` telemetry both
+    use it, so the reported ``iters_cap`` can never drift from what the
+    loop actually ran with."""
+    return beam + 4
+
+
 def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
     """Approximate medoid: the sample point nearest the dataset mean."""
     rng = np.random.default_rng(seed)
@@ -188,10 +197,11 @@ def beam_search_single(
 )
 def _beam_search_multi(
     graph: jax.Array,    # [n, R] int32, -1 pad
-    x: jax.Array,        # [n, d] (f32 or downcast; distances computed in f32)
+    x: jax.Array,        # [n, d] (f32/downcast, or int8 when scales given)
     norms: jax.Array,    # [n] f32 metric-dependent point norms (metrics.point_norms)
     queries: jax.Array,  # [Q, d]
     start,               # scalar entry point (dynamic)
+    scales,              # [n] f32 int8 dequant scales, or None (f32 path)
     *,
     beam: int,
     iters: int,
@@ -214,7 +224,32 @@ def _beam_search_multi(
     inf = jnp.float32(jnp.inf)
     q32 = queries.astype(jnp.float32)
 
-    if use_pallas:
+    if scales is not None:
+        # int8 scalar-quantized serving: the distance block is the
+        # quantized kernel/oracle pair; query norm terms are computed ONCE
+        # per batch and passed to both sides as DATA (a query is just a
+        # point on the norm side, so point_norms is the one mapping; f32
+        # reductions are not jit/eager bit-stable, so neither side may
+        # recompute them)
+        q_norms = _metrics.point_norms(q32, metric)
+        if use_pallas:
+            from repro.kernels.gather_distance import gather_distance_int8
+
+            def dist_fn(x, norms, q, ids, metric):
+                return gather_distance_int8(x, scales, norms, q, q_norms,
+                                            ids, metric=metric,
+                                            interpret=interpret)
+        else:
+            # the query batch is loop-invariant: quantize it ONCE here
+            # instead of per step (row-local + order-independent, so the
+            # bits match the kernel's per-tile quantization exactly)
+            q8, sq = _ref.quantize_symmetric(q32)
+
+            def dist_fn(x, norms, q, ids, metric):
+                return _ref.gather_distance_int8_core(x, scales, norms, q8,
+                                                      sq, q_norms, ids,
+                                                      metric=metric)
+    elif use_pallas:
         from repro.kernels.gather_distance import gather_distance
 
         dist_fn = functools.partial(gather_distance, interpret=interpret)
@@ -329,6 +364,7 @@ def beam_search_batch(
     metric: str = "l2",
     expansions: int = 4,
     norms=None,
+    scales=None,
     early_exit: bool = True,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
@@ -349,7 +385,7 @@ def beam_search_batch(
     ``lax.while_loop`` and exits as soon as every query has converged
     (all live beam entries visited — exactly the np reference's
     termination), so a generous cap costs nothing.  ``iters=None``
-    defaults to ``beam + 4`` (the legacy budget; with early exit the
+    defaults to ``default_iters(beam)`` (``beam + 4``, the legacy budget; with early exit the
     typical hop count is ~``beam / expansions``).  ``early_exit=False``
     forces the full cap (the converged state is a fixed point, so results
     are identical — tested).
@@ -358,24 +394,44 @@ def beam_search_batch(
     (``metrics.point_norms``); pass the precomputed array to skip the
     per-call reduction (``ServingIndex`` does).  ``with_stats=True``
     additionally returns per-query telemetry (hops, dist_comps).
+
+    ``scales`` switches on the int8 scalar-quantized serving path: ``x``
+    must then be the int8 packing (``ref.quantize_symmetric``) and
+    ``scales`` its [n] f32 per-point dequant scales, with ``norms`` the
+    EXACT pre-quantization f32 norms (required — they cannot be recovered
+    from the int8 copy).  Distances come from the quantized
+    kernel/oracle pair; the 4x-smaller points block also widens the
+    ``fits_vmem`` auto-enable window on TPU.
     """
     graph = jnp.asarray(graph)
     x = jnp.asarray(x)
     queries = jnp.asarray(queries)
+    if scales is not None:
+        if x.dtype != jnp.int8:
+            raise TypeError(
+                "scales given but points are not int8 — pack them with "
+                "kernels.ref.quantize_symmetric")
+        if norms is None:
+            raise ValueError(
+                "int8 serving needs the exact f32 point norms computed "
+                "BEFORE quantization (metrics.point_norms on the f32 "
+                "points); they cannot be recovered from the int8 copy")
+        scales = jnp.asarray(scales)
     if iters is None:
-        iters = beam + 4
+        iters = default_iters(beam)
     if use_pallas is None or interpret is None:
         on_tpu = jax.default_backend() == "tpu"
         if use_pallas is None:
             from repro.kernels.gather_distance import fits_vmem
 
-            use_pallas = on_tpu and fits_vmem(x)
+            use_pallas = on_tpu and (fits_vmem(x) if scales is None
+                                     else fits_vmem(x, scales))
         if interpret is None:
             interpret = not on_tpu
     if norms is None:
         norms = _metrics.point_norms(x, metric)
     ids, ds, hops, comps = _beam_search_multi(
-        graph, x, jnp.asarray(norms), queries, start,
+        graph, x, jnp.asarray(norms), queries, start, scales,
         beam=beam, iters=int(iters), metric=metric,
         expansions=int(expansions), early_exit=bool(early_exit),
         use_pallas=bool(use_pallas), interpret=bool(interpret),

@@ -464,24 +464,32 @@ def build(
 
 def serving_index(index: PiPNNIndex, x: np.ndarray, *, dtype=None):
     """The packed device-resident ``ServingIndex`` for ``(index, x)``,
-    cached on the index: the first call uploads graph/points/norms to the
-    device, every later call with the same dataset object reuses the same
-    device buffers — zero host->device transfers besides the queries.
+    cached on the index: the first call uploads graph/points/norms (and
+    the int8 scales when ``dtype="int8"``) to the device, every later
+    call with the same dataset and graph objects reuses the same device
+    buffers — zero host->device transfers besides the queries.
 
-    The cache holds a strong reference to ``x`` and keys on object
-    identity (``is``), so a recycled address of a freed array can never
-    alias into a stale hit."""
+    The cache holds strong references to ``x`` AND ``index.graph`` and
+    keys on object identity (``is``), so a recycled address of a freed
+    array can never alias into a stale hit — and replacing ``index.graph``
+    (e.g. re-running a build pass or pruning into a fresh array) after
+    the first search invalidates the cache instead of silently serving
+    the stale device copy of the old graph.  (In-place element writes to
+    the same array object are invisible to any identity key — copy-on-
+    write the graph instead.)"""
     from repro.core.serving import ServingIndex
 
     key = (index.start, index.params.metric,
            None if dtype is None else str(dtype))
     cached = getattr(index, "_serving", None)
     if (cached is not None and getattr(index, "_serving_x", None) is x
+            and getattr(index, "_serving_graph", None) is index.graph
             and getattr(index, "_serving_key", None) == key):
         return cached
     sv = ServingIndex.from_index(index, x, dtype=dtype)
     index._serving = sv
     index._serving_x = x
+    index._serving_graph = index.graph
     index._serving_key = key
     return sv
 
@@ -494,7 +502,7 @@ def search(
     k: int = 10,
     beam: int = 32,
     batch: bool = True,
-    expansions: int = 4,
+    expansions: int | None = None,
     iters: int | None = None,
     dtype=None,
     with_stats: bool = False,
@@ -505,12 +513,15 @@ def search(
     ``batch=True`` (the serving path) routes through a cached
     ``ServingIndex``: graph/points/norms live on the device after the
     first call, and queries run the multi-expansion beam search —
-    ``expansions`` best unvisited entries expanded per step, one fused
-    ``[Q, E*R]`` distance block (Pallas gather-distance kernel on TPU),
-    early exit on per-query convergence with ``iters`` (default
-    ``beam + 4``) as the backstop cap.  ``dtype`` downcasts the serving
-    points copy (e.g. ``jnp.bfloat16``).  ``with_stats=True`` returns
-    ``(ids, stats)`` with per-query hop/distance-comp telemetry.
+    ``expansions`` (default 4) best unvisited entries expanded per step,
+    one fused ``[Q, E*R]`` distance block (Pallas gather-distance kernel
+    on TPU), early exit on per-query convergence with ``iters`` (default
+    ``beam_search.default_iters(beam)``) as the backstop cap.  ``dtype``
+    downcasts the serving points copy (e.g. ``jnp.bfloat16``) or, with
+    ``dtype="int8"``, serves the scalar-quantized packing (int8 points +
+    per-point f32 scales, ~1/4 the f32 points footprint, int8 MXU
+    distance kernel).  ``with_stats=True`` returns ``(ids, stats)`` with
+    per-query hop/distance-comp telemetry.
 
     ``batch=False`` is the pointer-chasing numpy reference
     (``beam_search_np``) — the recall/parity ORACLE, not a serving path:
@@ -523,12 +534,15 @@ def search(
 
     if batch:
         sv = serving_index(index, x, dtype=dtype)
-        return sv.search(queries, k=k, beam=beam, expansions=expansions,
+        return sv.search(queries, k=k, beam=beam,
+                         expansions=4 if expansions is None else expansions,
                          iters=iters, with_stats=with_stats)
-    if with_stats or iters is not None or dtype is not None:
+    if (with_stats or iters is not None or dtype is not None
+            or expansions is not None):
         raise ValueError(
-            "with_stats / iters / dtype are serving-path options; "
-            "the batch=False np oracle does not support them")
+            "with_stats / iters / dtype / expansions are serving-path "
+            "options; the batch=False np oracle expands one vertex per "
+            "hop and does not support them")
     out = np.empty((queries.shape[0], k), dtype=np.int64)
     for i, q in enumerate(queries):
         ids, _, _ = bs.beam_search_np(

@@ -8,10 +8,14 @@ path touches as device arrays ONCE —
 
   * ``graph``  [n, R] int32 adjacency (−1 padded),
   * ``points`` [n, d], optionally downcast (e.g. ``jnp.bfloat16``) to halve
-    the serving footprint; distances still accumulate in f32,
+    the serving footprint, or scalar-quantized (``dtype="int8"``: per-point
+    symmetric int8 vectors at 1/4 the f32 footprint, the paper's Sec. 6
+    "quantized GEMM" follow-up) — distances still accumulate exactly
+    (f32, or int32 on the quantized inner product),
+  * ``scales`` [n] f32 dequantization scales (int8 packing only),
   * ``norms``  [n] f32 metric-dependent point norms
-    (``metrics.point_norms``) computed BEFORE the downcast, so the norm
-    half of the distance expansion keeps full precision,
+    (``metrics.point_norms``) computed BEFORE the downcast/quantization,
+    so the norm half of the distance expansion keeps full precision,
   * ``start``  entry point —
 
 and routes queries through the multi-expansion beam search engine
@@ -38,13 +42,27 @@ import numpy as np
 from repro.core import metrics as _metrics
 
 
+def _is_int8(dtype) -> bool:
+    """True for the scalar-quantized packing request: the string ``"int8"``
+    or any spelling of the int8 dtype (``jnp.int8``, ``np.int8``, ...)."""
+    if dtype is None:
+        return False
+    if isinstance(dtype, str):
+        return dtype == "int8"
+    try:
+        return jnp.dtype(dtype) == jnp.int8
+    except TypeError:
+        return False
+
+
 @dataclasses.dataclass
 class ServingIndex:
     graph: jax.Array          # [n, R] int32, -1 padded, device-resident
-    points: jax.Array         # [n, d] device-resident (possibly downcast)
+    points: jax.Array         # [n, d] device-resident (downcast or int8)
     norms: jax.Array          # [n] f32 point norms (metrics.point_norms)
     start: int                # entry point (medoid)
     metric: str = "l2"
+    scales: jax.Array | None = None   # [n] f32 dequant scales (int8 packing)
 
     @property
     def n(self) -> int:
@@ -55,9 +73,11 @@ class ServingIndex:
         return self.graph.shape[1]
 
     def device_bytes(self) -> int:
-        """Actual device-resident footprint of the packed index."""
-        return sum(int(a.size) * a.dtype.itemsize
-                   for a in (self.graph, self.points, self.norms))
+        """Actual device-resident footprint of the packed index (graph +
+        points + norms, plus the per-point scales on the int8 packing)."""
+        parts = (self.graph, self.points, self.norms) + (
+            () if self.scales is None else (self.scales,))
+        return sum(int(a.size) * a.dtype.itemsize for a in parts)
 
     @classmethod
     def from_graph(
@@ -71,14 +91,23 @@ class ServingIndex:
     ) -> "ServingIndex":
         """Pack an adjacency matrix + points for serving.  ``dtype`` (e.g.
         ``jnp.bfloat16``) downcasts the device points copy; norms are
-        computed in f32 first."""
+        computed in f32 first.  ``dtype="int8"`` (or ``jnp.int8``) packs
+        the scalar-quantized serving copy instead: per-point symmetric
+        int8 vectors + f32 dequant scales (``kernels.ref.
+        quantize_symmetric``), ~1/4 the points footprint, with the norm
+        half of every distance kept EXACT from the f32 norms."""
         gj = jnp.asarray(np.ascontiguousarray(graph), dtype=jnp.int32)
         xj = jnp.asarray(np.ascontiguousarray(x, dtype=np.float32))
         norms = _metrics.point_norms(xj, metric)
-        if dtype is not None:
+        scales = None
+        if _is_int8(dtype):
+            from repro.kernels.ref import quantize_symmetric
+
+            xj, scales = quantize_symmetric(xj)
+        elif dtype is not None:
             xj = xj.astype(dtype)
         return cls(graph=gj, points=xj, norms=norms, start=int(start),
-                   metric=metric)
+                   metric=metric, scales=scales)
 
     @classmethod
     def from_index(cls, index, x: np.ndarray, *, dtype=None) -> "ServingIndex":
@@ -117,9 +146,23 @@ class ServingIndex:
 
         q = np.ascontiguousarray(queries, dtype=np.float32)
         nq = q.shape[0]
-        chunk = nq if not query_chunk else min(int(query_chunk), max(nq, 1))
+        iters_cap = int(iters if iters is not None
+                        else _bs.default_iters(beam))
+        if nq == 0:
+            # short-circuit: never pad an empty batch up to a 1-row chunk
+            # and dispatch a full device search for zero queries
+            out = np.full((0, k), -1, dtype=np.int64)
+            if with_stats:
+                return out, {
+                    "hops": np.empty((0,), np.int32),
+                    "dist_comps": np.empty((0,), np.int32),
+                    "expansions": int(expansions),
+                    "iters_cap": iters_cap,
+                }
+            return out
+        chunk = nq if not query_chunk else min(int(query_chunk), nq)
         ids_parts, hops_parts, comps_parts = [], [], []
-        for s in range(0, max(nq, 1), max(chunk, 1)):
+        for s in range(0, nq, chunk):
             qc = q[s : s + chunk]
             pad = chunk - qc.shape[0]
             if pad:
@@ -127,7 +170,7 @@ class ServingIndex:
             ids, _, hops, comps = _bs.beam_search_batch(
                 self.graph, self.points, qc,
                 start=self.start, beam=beam, iters=iters, metric=self.metric,
-                expansions=expansions, norms=self.norms,
+                expansions=expansions, norms=self.norms, scales=self.scales,
                 early_exit=early_exit, use_pallas=use_pallas,
                 interpret=interpret, with_stats=True,
             )
@@ -135,18 +178,15 @@ class ServingIndex:
             ids_parts.append(np.asarray(ids)[:take])
             hops_parts.append(np.asarray(hops)[:take])
             comps_parts.append(np.asarray(comps)[:take])
-        ids = np.concatenate(ids_parts, axis=0) if ids_parts else \
-            np.empty((0, beam), np.int32)
+        ids = np.concatenate(ids_parts, axis=0)
         # beam < k: -1-pad to [Q, k] like the np oracle path
         out = _bs.pad_ids(ids, k).astype(np.int64)
         if with_stats:
             stats: dict[str, Any] = {
-                "hops": np.concatenate(hops_parts) if hops_parts else
-                        np.empty((0,), np.int32),
-                "dist_comps": np.concatenate(comps_parts) if comps_parts else
-                              np.empty((0,), np.int32),
+                "hops": np.concatenate(hops_parts),
+                "dist_comps": np.concatenate(comps_parts),
                 "expansions": int(expansions),
-                "iters_cap": int(iters if iters is not None else beam + 4),
+                "iters_cap": iters_cap,
             }
             return out, stats
         return out

@@ -9,11 +9,16 @@ edge_hash.py — fused residual-hash bit packing (paper Eq. 1).
 segmented_merge.py — rank-based per-row merge of two sorted HashPrune
                reservoirs (the segmented fold's bounded merge, no sort).
 gather_distance.py — fused neighbor gather + [Q_tile, E*R] distance block
-               (the multi-expansion beam search's per-step hot loop).
+               (the multi-expansion beam search's per-step hot loop),
+               f32/bf16 and int8 scalar-quantized serving variants.
 ops.py       — jit'd wrappers; ref.py — pure-jnp oracles.
 """
 from repro.kernels import ops, ref
-from repro.kernels.gather_distance import fits_vmem, gather_distance
+from repro.kernels.gather_distance import (
+    fits_vmem,
+    gather_distance,
+    gather_distance_int8,
+)
 from repro.kernels.ops import (
     edge_hashes,
     leaf_topk,

@@ -22,6 +22,13 @@ fit VMEM (``fits_vmem``); larger shards use the XLA fallback
 ``beam_search_batch(use_pallas=...)`` auto-enables it on TPU exactly like
 ``edge_hash`` / ``segmented_merge``, and it is interpret-mode tested
 against the oracle on CPU.
+
+``gather_distance_int8`` is the scalar-quantized twin (paper Sec. 6:
+"quantized GEMM operations on scalar-quantized points"): int8 points +
+per-point f32 scales packed by ``ServingIndex(dtype="int8")``, int8 x int8
+-> int32 batched matvec on the MXU, fused rescale + exact-norm expansion.
+The 4x-smaller points block means ``fits_vmem`` admits shards 4x larger
+before the HBM-streaming fallback is ever needed.
 """
 from __future__ import annotations
 
@@ -31,17 +38,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref as _ref
+
 LANE = 128
 _TQ = 8  # query rows per grid step (f32 sublane tile)
+_SUBLANE_I8 = 32  # int8 sublane tile: the packed points block pads rows to 32
 
 # points bytes budget for auto-enabling the VMEM-resident kernel (leave
 # headroom out of ~16 MB/core for the query/id/output tiles)
 _VMEM_POINTS_BUDGET = 8 * 1024 * 1024
 
 
-def fits_vmem(points: jax.Array, budget: int = _VMEM_POINTS_BUDGET) -> bool:
-    """True when the points block is small enough to keep VMEM-resident."""
-    return points.size * points.dtype.itemsize <= budget
+def fits_vmem(points: jax.Array, *extras: jax.Array,
+              budget: int = _VMEM_POINTS_BUDGET) -> bool:
+    """True when the points block (plus any ``extras`` that must ride along
+    VMEM-resident, e.g. the int8 packing's per-point scales) fits the
+    budget.  The check is itemsize-aware, so an int8 serving copy gets 4x
+    the f32 headroom: a shard that needed the HBM-streaming fallback at
+    f32 may serve fully VMEM-resident once scalar-quantized."""
+    total = sum(int(a.size) * a.dtype.itemsize for a in (points,) + extras)
+    return total <= budget
 
 
 def _gather_distance_kernel(q_ref, ids_ref, pts_ref, n2_ref, o_ref, *,
@@ -117,4 +133,102 @@ def gather_distance(
         out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
         interpret=interpret,
     )(queries, nbr_ids, points, norms)
+    return out[:nq, :c]
+
+
+def _gather_distance_int8_kernel(q_ref, ids_ref, pts_ref, scl_ref, n2_ref,
+                                 qa_ref, o_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)          # [TQ, d]
+    ids = ids_ref[...]                          # [TQ, C]
+    tq, c = ids.shape
+    flat = jnp.maximum(ids.reshape(-1), 0)      # [TQ*C]
+    g = jnp.take(pts_ref[...], flat, axis=0)    # [TQ*C, d] int8 gather
+    sg = jnp.take(scl_ref[...].reshape(-1), flat).reshape(tq, c)
+    # query quantized with the SAME symmetric scheme as the packed points
+    # (max reduction is padding-safe, round/clip elementwise => the oracle
+    # quantizes bit-identically on the unpadded array)
+    q8, sq = _ref.quantize_symmetric(q)
+    # int8 x int8 -> int32 batched matvec on the MXU: the accumulation is
+    # EXACT; only the single rescale below carries quantization error
+    ip = jax.lax.dot_general(
+        q8, g.reshape(tq, c, -1), (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )                                           # [TQ, C] int32
+    ipf = ip.astype(jnp.float32) * (sq[:, None] * sg)
+    rows = pl.program_id(0) * tq + \
+        jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)[:, 0]
+    qa = jnp.take(qa_ref[...].reshape(-1), rows)          # [TQ]
+    if metric == "mips":
+        d = -ipf
+    elif metric == "cosine":
+        n2 = jnp.take(n2_ref[...].reshape(-1), flat).reshape(tq, c)
+        d = 1.0 - ipf / jnp.maximum(qa[:, None] * n2, 1e-30)
+    else:
+        n2 = jnp.take(n2_ref[...].reshape(-1), flat).reshape(tq, c)
+        d = jnp.maximum(qa[:, None] + n2 - 2.0 * ipf, 0.0)
+    o_ref[...] = jnp.where(ids >= 0, d, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tq", "interpret"))
+def gather_distance_int8(
+    points: jax.Array,   # [n, d] int8 (quantize_symmetric packing)
+    scales: jax.Array,   # [n] f32 per-point dequantization scales
+    norms: jax.Array,    # [n] f32 EXACT norms (computed pre-quantization)
+    queries: jax.Array,  # [Q, d] f32
+    q_norms: jax.Array,  # [Q] f32 query norm terms (metrics.point_norms)
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+    tq: int = _TQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized fused gather-distance block [Q, C] f32 (+inf at pads).
+
+    The int8 serving twin of ``gather_distance``: the points block lives
+    VMEM-resident at 1/4 the f32 footprint (``fits_vmem`` sees the
+    itemsize, so shards 4x larger auto-enable the kernel), the gathered
+    rows hit the MXU as an int8 x int8 -> int32 batched matvec, and the
+    per-point scale + norm expansion are fused into the same pass.  The
+    query side is quantized per-row IN the kernel (symmetric, the
+    packing's own scheme — reused each grid step from the f32 query
+    tile); the query norm terms arrive precomputed (``q_norms``, from
+    ``metrics.point_norms`` on the queries, once per batch) so both
+    norm halves of
+    the distance expansion stay full-precision.  Semantics identical to
+    ``kernels.ref.gather_distance_int8_ref`` — bit-for-bit in interpret
+    mode (integer ops exact, f32 ops in matching order).
+    """
+    if points.dtype != jnp.int8:
+        raise TypeError("gather_distance_int8 expects int8 points")
+    nq, c = nbr_ids.shape
+    if nq == 0 or c == 0:
+        return jnp.full((nq, c), jnp.inf, jnp.float32)
+    q32 = queries.astype(jnp.float32)
+    qa = q_norms.astype(jnp.float32)
+    points = _pad(_pad(points, 0, _SUBLANE_I8, 0), 1, LANE, 0)
+    scales = _pad(scales.astype(jnp.float32), 0, _SUBLANE_I8, 0.0)
+    norms = _pad(norms.astype(jnp.float32), 0, _SUBLANE_I8, 0.0)
+    queries = _pad(_pad(q32, 0, tq, 0), 1, LANE, 0)
+    nbr_ids = _pad(_pad(nbr_ids, 0, tq, -1), 1, LANE, -1)
+    qa = _pad(qa, 0, tq, 0.0).reshape(1, -1)
+    qp, dp = queries.shape
+    cp = nbr_ids.shape[1]
+    np_ = points.shape[0]
+    scales = scales.reshape(1, np_)
+    norms = norms.reshape(1, np_)
+    out = pl.pallas_call(
+        functools.partial(_gather_distance_int8_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.float32),
+        grid=(qp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, dp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((np_, dp), lambda r: (0, 0)),
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),
+            pl.BlockSpec((1, np_), lambda r: (0, 0)),
+            pl.BlockSpec((1, qp), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+        interpret=interpret,
+    )(queries, nbr_ids, points, scales, norms, qa)
     return out[:nq, :c]

@@ -86,6 +86,95 @@ def rowwise_topk_ref(
     return jnp.where(ok, si, -1), jnp.where(ok, sd, jnp.inf)
 
 
+def quantize_symmetric(
+    v: jax.Array, eps: float = 1e-12
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 scalar quantization over the last axis.
+
+    ``scale = max(|v|) / 127`` (clamped to ``eps`` so zero rows quantize to
+    zeros instead of dividing by zero), ``q = clip(round(v / scale))``.
+    Returns ``(q int8 [..., d], scale f32 [...])``.  This is THE
+    quantization scheme of the repo — the SPMD build's int8 routing, the
+    int8 ``ServingIndex`` packing, and the gather-distance kernel's
+    query-side quantization all use it, so kernel and oracle quantize
+    bit-identically (max is order-independent, round/clip elementwise).
+
+    ``scale`` is formed as ``max * (1/127)`` — an explicit f32 reciprocal
+    multiply, NOT a division: XLA strength-reduces constant-divisor
+    divisions to reciprocal multiplies under jit but not eagerly, which
+    would put jitted (kernel) and eager (oracle) scales one ulp apart and
+    break the bit-for-bit interpret tests.
+    """
+    v32 = v.astype(jnp.float32)
+    inv127 = jnp.float32(1.0 / 127.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(v32), axis=-1), eps) * inv127
+    q = jnp.clip(jnp.round(v32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def gather_distance_int8_core(
+    points: jax.Array,   # [n, d] int8 (quantize_symmetric packing)
+    scales: jax.Array,   # [n] f32 per-point dequantization scales
+    norms: jax.Array,    # [n] f32 EXACT norms (computed pre-quantization)
+    q8: jax.Array,       # [Q, d] int8 pre-quantized queries
+    sq: jax.Array,       # [Q] f32 query dequantization scales
+    q_norms: jax.Array,  # [Q] f32 query norm terms (metrics.point_norms)
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+) -> jax.Array:
+    """Quantized gather + distance on PRE-quantized queries: [Q, C] f32.
+
+    The serving engine's XLA path quantizes the (loop-invariant) query
+    batch ONCE and calls this per beam-search step, skipping the
+    per-step requantize that the self-contained oracle wrapper pays.
+    """
+    safe = jnp.maximum(nbr_ids, 0)
+    g = points[safe].astype(jnp.int32)                   # [Q, C, d]
+    sg = scales[safe]                                    # [Q, C] f32
+    ip = jnp.einsum("qd,qcd->qc", q8.astype(jnp.int32), g)
+    ipf = ip.astype(jnp.float32) * (sq[:, None] * sg)
+    if metric == "mips":
+        d = -ipf
+    elif metric == "cosine":
+        d = 1.0 - ipf / jnp.maximum(q_norms[:, None] * norms[safe], 1e-30)
+    else:
+        d = jnp.maximum(q_norms[:, None] + norms[safe] - 2.0 * ipf, 0.0)
+    return jnp.where(nbr_ids >= 0, d, jnp.inf)
+
+
+def gather_distance_int8_ref(
+    points: jax.Array,   # [n, d] int8 (quantize_symmetric packing)
+    scales: jax.Array,   # [n] f32 per-point dequantization scales
+    norms: jax.Array,    # [n] f32 EXACT norms (computed pre-quantization)
+    queries: jax.Array,  # [Q, d] f32
+    q_norms: jax.Array,  # [Q] f32 query norm terms (metrics.point_norms)
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+) -> jax.Array:
+    """Quantized gather + distance oracle for int8 serving: [Q, C] f32.
+
+    The query is quantized per-row with the SAME symmetric scheme as the
+    packed points (``quantize_symmetric``), the inner product accumulates
+    exactly in int32, and only that term is rescaled:
+    ``ip ~= s_q * s_p * <q8, p8>``.  Both norm halves of the expansion
+    stay EXACT — ``norms`` are f32 norms of the original points and
+    ``q_norms`` of the f32 queries (``metrics.point_norms`` — a query
+    is just a point on the norm side) — so
+    quantization error enters through the inner product alone.  The
+    Pallas kernel (``kernels.gather_distance.gather_distance_int8``)
+    matches this bit-for-bit in interpret mode: integer ops are exact,
+    every f32 op is written in the same order on both sides, and the
+    quantization itself is row-local and order-independent, so WHERE it
+    runs (per kernel tile, hoisted once per batch in the engine, or here
+    per call) cannot change the bits.
+    """
+    q8, sq = quantize_symmetric(queries)
+    return gather_distance_int8_core(points, scales, norms, q8, sq,
+                                     q_norms, nbr_ids, metric=metric)
+
+
 def gather_distance_ref(
     points: jax.Array,   # [n, d] (f32 or downcast)
     norms: jax.Array,    # [n] f32 metric-dependent norms (metrics.point_norms)

@@ -138,9 +138,11 @@ def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
 
 
 def _quantize(v: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(v), axis=-1), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(v / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    # the repo's ONE symmetric int8 scheme — shared with the quantized
+    # ServingIndex packing and the gather-distance kernel's query side
+    from repro.kernels.ref import quantize_symmetric
+
+    return quantize_symmetric(v)
 
 
 def _route_pack(v: jax.Array, p: DistBuildParams):

@@ -8,6 +8,13 @@ batches.  Works for every family (KV cache, SSM state, or hybrid).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
       --requests 16 --batch 8 --prompt-len 32 --max-new 32
+
+Also here: ``Retriever``, the ANN side of the serving stack — a PiPNN
+index packed device-resident (``core.serving.ServingIndex``) with a
+selectable points precision (``points_dtype`` "f32" | "bf16" | "int8";
+int8 is the scalar-quantized packing, ~1/4 the points footprint, int8 MXU
+distance kernel).  ``examples/rag_serve.py`` threads it in front of the
+LM server for retrieval-augmented generation.
 """
 from __future__ import annotations
 
@@ -23,6 +30,77 @@ from repro.configs.registry import ARCH_IDS, get_config
 from repro.distributed import sharding as shd
 from repro.launch import steps
 from repro.launch.mesh import make_local_mesh
+
+
+RETRIEVER_DTYPES = ("f32", "bf16", "int8")
+
+
+class Retriever:
+    """Device-resident ANN retrieval for the serving stack.
+
+    Wraps a PiPNN index + its corpus embeddings as a packed
+    ``ServingIndex`` so every ``retrieve`` call transfers nothing but the
+    query embeddings.  ``points_dtype`` selects the serving precision of
+    the corpus copy: "f32" (exact), "bf16" (half the footprint), or
+    "int8" (scalar-quantized: int8 vectors + per-point f32 scales, ~1/4
+    the points footprint, distances via the int8 MXU gather-distance
+    kernel with exact norm terms).
+    """
+
+    def __init__(self, corpus_emb: np.ndarray, index=None, *,
+                 points_dtype: str = "f32", metric: str | None = None,
+                 build_params=None, seed: int = 0):
+        """``metric`` defaults to the prebuilt ``index``'s (or explicit
+        ``build_params``') own metric — serving ALWAYS uses the index's,
+        so passing a disagreeing one is a loud error, not a silent
+        reinterpretation — and to "mips" when building fresh with default
+        params (``seed`` only applies to that default build)."""
+        from repro.core import pipnn
+        from repro.core.serving import ServingIndex
+
+        if points_dtype not in RETRIEVER_DTYPES:
+            raise ValueError(f"points_dtype must be one of "
+                             f"{RETRIEVER_DTYPES}, got {points_dtype!r}")
+        if index is not None:
+            if metric is not None and index.params.metric != metric:
+                raise ValueError(
+                    f"metric={metric!r} does not match the prebuilt "
+                    f"index's metric={index.params.metric!r}")
+        elif build_params is not None:
+            if metric is not None and build_params.metric != metric:
+                raise ValueError(
+                    f"metric={metric!r} does not match "
+                    f"build_params.metric={build_params.metric!r}")
+        elif metric is None:
+            metric = "mips"
+        if index is None:
+            from repro.core.leaf import LeafParams
+            from repro.core.pipnn import PiPNNParams
+            from repro.core.rbc import RBCParams
+
+            if build_params is None:
+                # MIPS alpha-pruning over-sparsifies hub-structured
+                # graphs; keep the HashPrune reservoir as-is (standard
+                # DiskANN-MIPS practice)
+                build_params = PiPNNParams(
+                    rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                    leaf=LeafParams(k=2), metric=metric, max_deg=32,
+                    final_prune=(metric != "mips"), seed=seed)
+            index = pipnn.build(corpus_emb, build_params)
+        self.index = index
+        dtype = {"f32": None, "bf16": jnp.bfloat16, "int8": "int8"}[
+            points_dtype]
+        self.points_dtype = points_dtype
+        self.sv = ServingIndex.from_index(index, corpus_emb, dtype=dtype)
+
+    def retrieve(self, q_emb: np.ndarray, *, k: int = 2,
+                 beam: int = 32) -> np.ndarray:
+        """Top-k corpus ids [Q, k] for a query-embedding batch."""
+        return self.sv.search(np.asarray(q_emb, dtype=np.float32),
+                              k=k, beam=beam)
+
+    def device_bytes(self) -> int:
+        return self.sv.device_bytes()
 
 
 class Server:

@@ -198,6 +198,134 @@ def test_gather_distance_fits_vmem_budget():
     assert not fits_vmem(jnp.zeros((1 << 20, 128), jnp.float32))
 
 
+def test_fits_vmem_int8_headroom():
+    """The budget check is itemsize-aware: an int8 packing (plus its f32
+    scales) fits where the same-shape f32 block does not."""
+    from repro.kernels.gather_distance import fits_vmem
+
+    n, d = 40960, 128           # f32: 20 MB > budget; int8 + scales: ~5.2 MB
+    assert not fits_vmem(jnp.zeros((n, d), jnp.float32))
+    assert fits_vmem(jnp.zeros((n, d), jnp.int8), jnp.zeros((n,), jnp.float32))
+    # the extras count against the budget too
+    assert not fits_vmem(jnp.zeros((n, d), jnp.int8),
+                         jnp.zeros((n, d), jnp.float32))
+
+
+# ------------------------------------------- int8 gather-distance (serving) ---
+
+def _quantized(rng, n, d):
+    x32 = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    x8, scl = ref.quantize_symmetric(x32)
+    return x32, x8, scl
+
+
+def test_quantize_symmetric_basics():
+    rng = np.random.default_rng(3)
+    x32, x8, scl = _quantized(rng, 50, 19)
+    assert x8.dtype == jnp.int8 and scl.dtype == jnp.float32
+    assert (np.abs(np.asarray(x8)) <= 127).all()
+    assert (np.asarray(scl) > 0).all()
+    # every row's max-|value| element hits +-127 exactly
+    assert (np.max(np.abs(np.asarray(x8)), axis=-1) == 127).all()
+    # dequantization error bounded by half a step per component
+    err = np.abs(np.asarray(x8) * np.asarray(scl)[:, None] - np.asarray(x32))
+    assert (err <= 0.5 * np.asarray(scl)[:, None] + 1e-7).all()
+
+
+def test_quantize_symmetric_zero_rows():
+    """Zero rows quantize to zeros with a tiny positive scale (no NaN/inf
+    from the 0/0)."""
+    x = jnp.zeros((4, 8), jnp.float32)
+    q, s = ref.quantize_symmetric(x)
+    assert (np.asarray(q) == 0).all()
+    assert (np.asarray(s) > 0).all() and np.isfinite(np.asarray(s)).all()
+
+
+@pytest.mark.parametrize("n,d,q,c", GD_SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_int8_matches_ref_bitexact(n, d, q, c, metric):
+    """The quantized Pallas kernel (interpret mode) must agree with the
+    jnp oracle BIT-FOR-BIT: the int8 x int8 -> int32 inner product is
+    exact, the quantization is the shared order-independent scheme, and
+    every f32 op is written in matching order on both sides."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_int8
+
+    rng = np.random.default_rng(hash((n, d, q, c, metric, 8)) % 2**31)
+    x32, x8, scl = _quantized(rng, n, d)
+    qs = jnp.asarray(rng.standard_normal((q, d)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, n, (q, c)), dtype=jnp.int32)
+    norms = point_norms(x32, metric)          # EXACT, pre-quantization
+    qn = point_norms(qs, metric)   # query norm terms: same mapping
+    got = gather_distance_int8(x8, scl, norms, qs, qn, ids, metric=metric,
+                               interpret=INTERP)
+    want = ref.gather_distance_int8_ref(x8, scl, norms, qs, qn, ids,
+                                        metric=metric)
+    g = np.asarray(got)
+    assert (np.isinf(g) == (np.asarray(ids) < 0)).all()
+    np.testing.assert_array_equal(g, np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_int8_close_to_f32(metric):
+    """Quantized distances approximate the exact f32 block: the norm
+    halves are exact, so the error is the rescaled int8 inner-product
+    rounding only."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_int8
+
+    rng = np.random.default_rng(11)
+    x32, x8, scl = _quantized(rng, 300, 24)
+    qs = jnp.asarray(rng.standard_normal((9, 24)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 300, (9, 40)), dtype=jnp.int32)
+    norms = point_norms(x32, metric)
+    qn = point_norms(qs, metric)   # query norm terms: same mapping
+    got = np.asarray(gather_distance_int8(x8, scl, norms, qs, qn, ids,
+                                          metric=metric, interpret=INTERP))
+    exact = np.asarray(ref.gather_distance_ref(x32, norms, qs, ids,
+                                               metric=metric))
+    # the quantization error is ABSOLUTE in the inner product (half a step
+    # per component), so near-zero mips values need the atol term
+    np.testing.assert_allclose(got, exact, rtol=0.05, atol=0.2)
+
+
+def test_gather_distance_int8_degenerate_scales():
+    """Zero vectors and constant datasets: tiny clamped scales must not
+    produce NaN/inf in valid entries, and kernel == oracle still."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_int8
+
+    rng = np.random.default_rng(0)
+    for x32 in (jnp.zeros((40, 8), jnp.float32),               # all zero
+                jnp.full((40, 8), 2.25, jnp.float32),          # constant
+                jnp.zeros((40, 8), jnp.float32).at[7:].set(-1.5)):
+        x8, scl = ref.quantize_symmetric(x32)
+        qs = jnp.asarray(rng.standard_normal((5, 8)), dtype=jnp.float32)
+        ids = jnp.asarray(rng.integers(-1, 40, (5, 11)), dtype=jnp.int32)
+        for metric in ("l2", "mips", "cosine"):
+            norms = point_norms(x32, metric)
+            qn = point_norms(qs, metric)   # query norm terms: same mapping
+            got = np.asarray(gather_distance_int8(
+                x8, scl, norms, qs, qn, ids, metric=metric, interpret=INTERP))
+            want = np.asarray(ref.gather_distance_int8_ref(
+                x8, scl, norms, qs, qn, ids, metric=metric))
+            np.testing.assert_array_equal(got, want)
+            valid = np.asarray(ids) >= 0
+            assert np.isfinite(got[valid]).all()
+
+
+def test_gather_distance_int8_rejects_float_points():
+    from repro.kernels.gather_distance import gather_distance_int8
+
+    x = jnp.zeros((16, 8), jnp.float32)
+    aux = jnp.zeros((16,), jnp.float32)
+    qs = jnp.zeros((2, 8), jnp.float32)
+    ids = jnp.zeros((2, 4), jnp.int32)
+    with pytest.raises(TypeError):
+        gather_distance_int8(x, aux, aux, qs, jnp.zeros((2,), jnp.float32),
+                             ids, interpret=INTERP)
+
+
 # ----------------------------------------------- kernel-powered PiPNN build ---
 
 def test_full_build_with_flashknn_matches_jax_path():

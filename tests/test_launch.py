@@ -11,7 +11,7 @@ import jax
 from repro.configs.base import ShapeCell
 from repro.configs.registry import get_config
 from repro.launch import steps, train
-from repro.launch.serve import Server
+from repro.launch.serve import Retriever, Server
 
 
 def test_train_cli_loss_falls(tmp_path):
@@ -35,6 +35,31 @@ def test_train_checkpoint_restart(tmp_path, capsys):
     first = float(re.search(r"done: loss ([\d.]+) ->", out1).group(1))
     last = float(re.search(r"done: loss [\d.]+ -> ([\d.]+)", out2).group(1))
     assert last < first
+
+
+def test_retriever_dtypes_agree(tmp_path):
+    """The ANN Retriever serves at every points precision; the int8
+    scalar-quantized copy is the smallest and stays at retrieval parity
+    with f32 on an easy clustered corpus."""
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((16, 24)) * 3.0
+    corpus = (centers[rng.integers(0, 16, 800)]
+              + 0.2 * rng.standard_normal((800, 24))).astype(np.float32)
+    f32 = Retriever(corpus, points_dtype="f32", metric="mips")
+    i8 = Retriever(corpus, index=f32.index, points_dtype="int8",
+                   metric="mips")
+    assert i8.device_bytes() < f32.device_bytes()
+    q = corpus[:16] + 0.05 * rng.standard_normal((16, 24)).astype(np.float32)
+    h32 = f32.retrieve(q, k=4, beam=32)
+    h8 = i8.retrieve(q, k=4, beam=32)
+    overlap = np.mean([len(set(a) & set(b)) / 4 for a, b in zip(h32, h8)])
+    assert overlap >= 0.9, overlap
+    with pytest.raises(ValueError):
+        Retriever(corpus, index=f32.index, points_dtype="fp4")
+    # a metric disagreeing with the prebuilt index is a loud error, not a
+    # silent reinterpretation (serving always uses the index's metric)
+    with pytest.raises(ValueError):
+        Retriever(corpus, index=f32.index, metric="l2")
 
 
 def test_server_generates(tmp_path):

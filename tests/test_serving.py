@@ -276,6 +276,16 @@ def test_pipnn_search_oracle_rejects_serving_options(built):
         pipnn.search(idx, x, q, k=5, beam=16, batch=False, with_stats=True)
     with pytest.raises(ValueError):
         pipnn.search(idx, x, q, k=5, beam=16, batch=False, iters=8)
+    # regression: a non-default `expansions` used to be silently IGNORED
+    # on the oracle path (it expands one vertex per hop by construction),
+    # letting callers believe they had swept E
+    with pytest.raises(ValueError):
+        pipnn.search(idx, x, q, k=5, beam=16, batch=False, expansions=8)
+    with pytest.raises(ValueError):
+        pipnn.search(idx, x, q, k=5, beam=16, batch=False, dtype="int8")
+    # the default (expansions=None) still runs the oracle
+    out = pipnn.search(idx, x, q, k=5, beam=16, batch=False)
+    assert out.shape == (2, 5)
 
 
 def test_pipnn_search_with_stats(built):
@@ -286,6 +296,193 @@ def test_pipnn_search_with_stats(built):
     assert stats["hops"].shape == (6,)
     assert stats["dist_comps"].shape == (6,)
     assert stats["iters_cap"] == 20
+
+
+def test_serving_stats_iters_cap_single_sourced(built):
+    """Regression: the engine's default cap and the reported ``iters_cap``
+    both come from ``beam_search.default_iters`` — they used to be two
+    hard-coded ``beam + 4`` copies that could silently drift."""
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    for beam in (5, 16, 33):
+        _, stats = sv.search(x[:3], k=4, beam=beam, with_stats=True)
+        assert stats["iters_cap"] == bs.default_iters(beam)
+    _, stats = sv.search(x[:3], k=4, beam=16, iters=7, with_stats=True)
+    assert stats["iters_cap"] == 7
+
+
+def test_serving_empty_query_batch_short_circuits(built, monkeypatch):
+    """Regression: an empty batch with ``query_chunk`` set used to pad up
+    to a 1-row chunk and dispatch a full device search; now nq == 0
+    returns immediately with correctly-shaped outputs."""
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    calls = {"n": 0}
+    orig = bs.beam_search_batch
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(bs, "beam_search_batch", counting)
+    empty = np.empty((0, x.shape[1]), np.float32)
+    for kw in ({}, {"query_chunk": 16}, {"query_chunk": 1}):
+        out = sv.search(empty, k=10, beam=8, **kw)
+        assert out.shape == (0, 10) and out.dtype == np.int64
+    out, stats = sv.search(empty, k=3, beam=8, query_chunk=4,
+                           with_stats=True)
+    assert out.shape == (0, 3)
+    assert stats["hops"].shape == (0,)
+    assert stats["dist_comps"].shape == (0,)
+    assert stats["iters_cap"] == bs.default_iters(8)
+    assert calls["n"] == 0
+
+
+def test_pipnn_serving_cache_invalidated_by_graph_change(built):
+    """Regression: the serving cache keyed on (start, metric, dtype) and
+    the dataset object but NOT the graph, so replacing ``index.graph``
+    after the first search silently served the stale device copy."""
+    idx, x = built
+    q = x[:8]
+    idx._serving = None
+    idx._serving_key = None
+    idx._serving_graph = None
+    first = pipnn.search(idx, x, q, k=5, beam=16)
+    sv1 = idx._serving
+    # a trivial replacement graph: every row points at vertex 0 only
+    old_graph = idx.graph
+    try:
+        idx.graph = np.full_like(old_graph, -1)
+        idx.graph[:, 0] = 0
+        degraded = pipnn.search(idx, x, q, k=5, beam=16)
+        assert idx._serving is not sv1, "stale ServingIndex reused"
+        # the degenerate graph can only ever reach vertex 0 + the start
+        assert set(np.unique(degraded)) <= {-1, 0, idx.start}
+        # and restoring the original graph object restores the results
+        idx.graph = old_graph
+        again = pipnn.search(idx, x, q, k=5, beam=16)
+        np.testing.assert_array_equal(first, again)
+    finally:
+        idx.graph = old_graph
+
+
+# ------------------------------------------------------------ int8 serving ---
+
+def test_serving_int8_packing_and_device_bytes(built):
+    idx, x = built
+    n, d = x.shape
+    r = idx.graph.shape[1]
+    sv = ServingIndex.from_index(idx, x)
+    sv8 = ServingIndex.from_index(idx, x, dtype="int8")
+    assert sv8.points.dtype == jnp.int8
+    assert sv8.scales is not None and sv8.scales.dtype == jnp.float32
+    assert sv8.norms.dtype == jnp.float32
+    # exact accounting: graph + int8 points + f32 norms + f32 scales
+    assert sv8.device_bytes() == n * r * 4 + n * d + n * 4 + n * 4
+    assert sv.device_bytes() == n * r * 4 + n * d * 4 + n * 4
+    assert sv8.device_bytes() < sv.device_bytes()
+    # jnp.int8 / np.int8 spellings select the same packing
+    sv8b = ServingIndex.from_index(idx, x, dtype=jnp.int8)
+    assert sv8b.points.dtype == jnp.int8 and sv8b.scales is not None
+
+
+def test_serving_int8_points_footprint_quarter():
+    """On a points-dominated (BigANN-shaped, d=128) packing the int8 copy
+    is <= ~1/3 of the f32 total; the points block itself is exactly 1/4."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((512, 128)).astype(np.float32)
+    g = np.zeros((512, 16), np.int32)
+    sv = ServingIndex.from_graph(g, x, 0)
+    sv8 = ServingIndex.from_graph(g, x, 0, dtype="int8")
+    assert sv8.points.size * sv8.points.dtype.itemsize == \
+        (sv.points.size * sv.points.dtype.itemsize) // 4
+    assert sv8.device_bytes() <= 0.35 * sv.device_bytes()
+
+
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_serving_int8_recall_parity(metric):
+    """int8 serving must stay within 0.02 recall of f32 serving on every
+    metric (the norm halves are exact; only the inner product rounds)."""
+    rng = np.random.default_rng(17)
+    x = rng.standard_normal((1200, 24)).astype(np.float32)
+    truth = brute_force_knn(x, x, 17, metric=metric)
+    graph = truth[:, 1:17].astype(np.int32)
+    q = rng.standard_normal((48, 24)).astype(np.float32)
+    gt = brute_force_knn(x, q, 10, metric=metric)
+    start = medoid(x)
+    sv = ServingIndex.from_graph(graph, x, start, metric=metric)
+    sv8 = ServingIndex.from_graph(graph, x, start, metric=metric,
+                                  dtype="int8")
+    r32 = recall_at_k(sv.search(q, k=10, beam=32), gt, 10)
+    r8 = recall_at_k(sv8.search(q, k=10, beam=32), gt, 10)
+    assert r8 >= r32 - 0.02, (metric, r32, r8)
+
+
+def test_serving_int8_pallas_interpret_matches_ref_path(built):
+    """The int8 Pallas serving path (interpret mode) returns the same
+    neighbors as the int8 XLA oracle path — the kernel pair is bit-equal,
+    so the searches are too."""
+    idx, x = built
+    q = x[:24]
+    sv8 = ServingIndex.from_index(idx, x, dtype="int8")
+    a = sv8.search(q, k=10, beam=24, use_pallas=False)
+    b = sv8.search(q, k=10, beam=24, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_serving_int8_degenerate_data():
+    """Constant / zero datasets: clamped scales keep every distance
+    finite and the search still returns valid ids."""
+    for x in (np.zeros((64, 8), np.float32),
+              np.full((64, 8), 3.0, np.float32)):
+        graph = np.stack([(np.arange(64, dtype=np.int32) + 1) % 64,
+                          (np.arange(64, dtype=np.int32) + 2) % 64], axis=1)
+        sv8 = ServingIndex.from_graph(graph, x, 0, dtype="int8")
+        q = np.zeros((3, 8), np.float32)
+        out, stats = sv8.search(q, k=5, beam=8, with_stats=True)
+        assert out.shape == (3, 5)
+        assert (out >= 0).all() and (out < 64).all()
+
+
+def test_pipnn_search_int8_end_to_end(built):
+    """dtype="int8" threads through pipnn.search -> cached ServingIndex
+    -> quantized engine, at recall parity with the f32 serving path.
+    (The cache is a SINGLE slot keyed by (start, metric, dtype) + data/
+    graph identity: switching dtype repacks and replaces it — hold your
+    own ServingIndex instances to serve both precisions side by side.)"""
+    idx, x = built
+    q = x[:64] + 0.01 * np.random.default_rng(3).standard_normal(
+        (64, x.shape[1])).astype(np.float32)
+    truth = brute_force_knn(x, q, 10)
+    r32 = recall_at_k(pipnn.search(idx, x, q, k=10, beam=48), truth, 10)
+    found8 = pipnn.search(idx, x, q, k=10, beam=48, dtype="int8")
+    r8 = recall_at_k(found8, truth, 10)
+    assert r8 >= r32 - 0.02, (r32, r8)
+    sv8 = idx._serving
+    assert sv8.points.dtype == jnp.int8
+    # same dataset + graph + dtype => cache hit
+    pipnn.search(idx, x, q, k=10, beam=48, dtype="int8")
+    assert idx._serving is sv8
+
+
+def test_beam_search_batch_int8_guards():
+    """scales without int8 points (or without exact norms) is an error —
+    silent misuse would serve garbage distances."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((32, 8)).astype(np.float32)
+    graph = np.zeros((32, 2), np.int32)
+    q = x[:2]
+    from repro.kernels.ref import quantize_symmetric
+    from repro.core.metrics import point_norms
+    x8, scl = quantize_symmetric(jnp.asarray(x))
+    with pytest.raises(TypeError):
+        beam_search_batch(graph, x, q, start=0, beam=4, scales=scl)
+    with pytest.raises(ValueError):
+        beam_search_batch(graph, x8, q, start=0, beam=4, scales=scl)
+    # proper call: int8 points + scales + exact norms
+    ids, _ = beam_search_batch(graph, x8, q, start=0, beam=4, scales=scl,
+                               norms=point_norms(jnp.asarray(x), "l2"))
+    assert np.asarray(ids).shape == (2, 4)
 
 
 def test_serving_pallas_interpret_path_matches(built):
