@@ -13,6 +13,18 @@ plus the serving-engine comparison the multi-expansion PR is about:
   * ``np_oracle``   — the pointer-chasing numpy reference, timed on a
     query subset (it is per-query host code by design).
 
+Two sweeps ride along for the sharded-serving PR:
+
+  * an expansion-width (E) sweep at the serving beam, isolating the
+    multi-expansion knob from the beam knob,
+  * a sharded SPMD sweep over 1/2/4/8 simulated devices — each point
+    runs in a SUBPROCESS with ``--xla_force_host_platform_device_count``
+    (the flag must be set before jax initializes), builds the same
+    deterministic index, and serves through the mesh-sharded
+    ``ShardedServingIndex`` (replicate-to-all router, halo shards,
+    cross-shard merge); rows record recall parity vs the parent's
+    single-device serving and per-shard footprints.
+
 Emits one row per (index, engine, beam) point so the full trade-off curve
 is in the CSV; the summary rows report QPS at the 0.9-recall operating
 point, and everything is appended to BENCH_qps.json
@@ -21,6 +33,11 @@ across PRs — including the multi-expansion-vs-single-expansion speedup
 and the int8-vs-f32 serving deltas.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -36,6 +53,67 @@ from repro.core.serving import ServingIndex
 
 N, D = 4096, 32
 NP_QUERIES = 32   # subset for timing the per-query host oracle
+E_SWEEP = (1, 2, 4, 8)      # expansion widths at the serving beam
+SHARD_DEVICES = (1, 2, 4, 8)
+SHARD_BEAM = 32
+
+
+def _shard_params() -> PiPNNParams:
+    """The pipnn_1rep build, shared between parent and sharded children so
+    every sweep point serves the SAME graph."""
+    return PiPNNParams(rbc=RBCParams(c_max=256, c_min=32, fanout=(4, 2)),
+                       leaf=LeafParams(k=2), max_deg=32, seed=0)
+
+
+def _sharded_child(ndev: int) -> dict:
+    """One sharded sweep point: runs inside a subprocess whose XLA_FLAGS
+    forced ``ndev`` host devices.  Prints nothing; returns the record."""
+    import jax
+
+    from benchmarks.common import dataset, ground_truth, timed
+    from jax.sharding import Mesh
+    from repro.core.serving import ServingIndex
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    x, q = dataset(N, D)
+    truth = ground_truth(N, D)
+    idx = pipnn.build(x, _shard_params())
+    mesh = Mesh(np.array(jax.devices()), ("shards",))
+    ssv = ServingIndex.from_index(idx, x, mesh=mesh)
+    fn = lambda: ssv.search(q, k=10, beam=SHARD_BEAM, expansions=4)
+    ids, _ = timed(fn)                        # warm-up/compile
+    ids, secs = timed(fn, repeat=3)
+    r = recall_at_k(pad_ids(ids, 10), truth[:, :10], 10)
+    return {
+        "engine": "serve_sharded", "ndev": ndev, "beam": SHARD_BEAM,
+        "recall": round(float(r), 4),
+        "qps": round(q.shape[0] / max(secs, 1e-9), 1),
+        "per_shard_bytes": ssv.device_bytes(per_shard=True),
+        "shard_capacity": ssv.shard_capacity,
+        "kernel_path": ssv.kernel_path,
+    }
+
+
+def _run_sharded_sweep() -> list[dict]:
+    """Spawn one subprocess per device count (the forced-host-device flag
+    must precede jax init) and collect the records; a failed point is
+    recorded with its error rather than sinking the bench."""
+    out = []
+    for ndev in SHARD_DEVICES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={ndev}"
+                            ).strip()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_qps_recall",
+             "--sharded-child", str(ndev)],
+            capture_output=True, text=True, env=env, timeout=1200)
+        if proc.returncode != 0:
+            out.append({"engine": "serve_sharded", "ndev": ndev,
+                        "error": proc.stderr.strip()[-300:]})
+            continue
+        out.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    return out
 
 
 def run() -> list[Row]:
@@ -135,6 +213,52 @@ def run() -> list[Row]:
         records.append({"index": name, "engine": "np_oracle", "beam": op_beam,
                         "recall": round(r_np, 4), "qps": round(qps_np, 1),
                         "n_queries": NP_QUERIES})
+    # ---- expansion-width sweep at the serving beam (pipnn_1rep) --------
+    graph, start = indexes["pipnn_1rep"]
+    sv = ServingIndex.from_graph(graph, x, start)
+    r_single = 0.0
+    for e in E_SWEEP:
+        fn = lambda: sv.search(q, k=10, beam=SHARD_BEAM, expansions=e)
+        ids, _ = timed(fn)                       # warm-up/compile
+        ids, secs = timed(fn, repeat=3)
+        r = recall_at_k(pad_ids(ids, 10), truth[:, :10], 10)
+        qps = q.shape[0] / max(secs, 1e-9)
+        rows.append((f"qps_recall/pipnn_1rep/E{e}/beam{SHARD_BEAM}",
+                     secs / q.shape[0] * 1e6,
+                     f"recall={r:.3f} qps={qps:.0f}"))
+        records.append({"index": "pipnn_1rep", "engine": "serve",
+                        "expansions": e, "beam": SHARD_BEAM,
+                        "recall": round(r, 4), "qps": round(qps, 1)})
+        if e == 4:
+            r_single = r                         # sharded-parity reference
+    # ---- sharded SPMD sweep (subprocess per simulated device count) ----
+    for rec in _run_sharded_sweep():
+        if "error" in rec:
+            rows.append((f"qps_recall/pipnn_1rep/sharded_ndev{rec['ndev']}",
+                         0.0, f"ERROR {rec['error'][:80]}"))
+            records.append({"index": "pipnn_1rep", **rec})
+            continue
+        rec["recall_delta_vs_single"] = round(r_single - rec["recall"], 4)
+        rows.append((
+            f"qps_recall/pipnn_1rep/sharded_ndev{rec['ndev']}"
+            f"/beam{SHARD_BEAM}",
+            q.shape[0] / max(rec["qps"], 1e-9) / q.shape[0] * 1e6,
+            f"recall={rec['recall']:.3f} qps={rec['qps']:.0f} "
+            f"delta={rec['recall_delta_vs_single']:+.4f} "
+            f"per_shard_bytes={rec['per_shard_bytes']}"))
+        records.append({"index": "pipnn_1rep", **rec})
     append_bench_json(records, path=BENCH_QPS_JSON, bench="qps_recall",
                       n=N, d=D, n_queries=q.shape[0])
     return rows
+
+
+if __name__ == "__main__":
+    # sharded-sweep child entry: the parent spawns
+    #   python -m benchmarks.bench_qps_recall --sharded-child NDEV
+    # with XLA_FLAGS forcing NDEV host devices (set before jax init).
+    if "--sharded-child" in sys.argv:
+        n = int(sys.argv[sys.argv.index("--sharded-child") + 1])
+        print(json.dumps(_sharded_child(n)))
+        sys.exit(0)
+    for row in run():
+        print(",".join(str(c) for c in row))

@@ -23,6 +23,11 @@
 #    must stay within 0.02 recall of f32 serving at the same operating
 #    point (serve_i8 row appended too), and on a BigANN-shaped packing
 #    (d=128, R=16) the int8 ServingIndex footprint must be <= ~1/3 of f32
+# 6. sharded-serving recall-parity gate: on 8 forced host devices
+#    (XLA_FLAGS=--xla_force_host_platform_device_count=8) the mesh-sharded
+#    serving path (halo shards + shard_map search + cross-shard merge)
+#    must stay within 0.01 recall of single-device serving, f32 AND int8,
+#    and the S=1 mesh must match single-device ids exactly
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -188,6 +193,60 @@ append_bench_json(
      {"metric_name": "serve_vs_single_at0.9", "speedup": round(speedup, 2)}],
     path=BENCH_QPS_JSON, bench="qps_smoke", n=2000, d=32, n_queries=128)
 print("serving QPS smoke OK")
+EOF
+
+echo "== smoke: sharded SPMD serving recall parity (8 simulated devices) =="
+# the forced-host-device flag must be set before jax initializes, so this
+# step runs in its own python process with its own XLA_FLAGS
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+python - <<'EOF'
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import pipnn
+from repro.core.beam_search import brute_force_knn, recall_at_k
+from repro.core.leaf import LeafParams
+from repro.core.pipnn import PiPNNParams
+from repro.core.rbc import RBCParams
+from repro.core.serving import ServingIndex
+
+assert len(jax.devices()) == 8, jax.devices()
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+q = x[:128] + 0.01 * rng.standard_normal((128, 32)).astype(np.float32)
+truth = brute_force_knn(x, q, 10)
+p = PiPNNParams(rbc=RBCParams(c_max=128, c_min=16, fanout=(3, 2)),
+                leaf=LeafParams(k=2), l_max=32, max_deg=16, seed=1)
+idx = pipnn.build(x, p)
+
+sv = ServingIndex.from_index(idx, x)
+ids1 = sv.search(q, k=10, beam=32)
+r1 = recall_at_k(ids1, truth, 10)
+
+# S=1 mesh is the single-device search wearing the shard_map plumbing
+m1 = Mesh(np.array(jax.devices()[:1]), ("shards",))
+np.testing.assert_array_equal(
+    ids1, ServingIndex.from_index(idx, x, mesh=m1).search(q, k=10, beam=32))
+
+mesh = Mesh(np.array(jax.devices()), ("shards",))
+ssv = ServingIndex.from_index(idx, x, mesh=mesh)
+ids8, stats = ssv.search(q, k=10, beam=32, with_stats=True)
+r8 = recall_at_k(ids8, truth, 10)
+print(f"  f32: single={r1:.3f} sharded(S=8)={r8:.3f} "
+      f"delta={r1 - r8:+.4f} per_shard_bytes="
+      f"{ssv.device_bytes(per_shard=True)} router={stats['router']}")
+assert r8 >= r1 - 0.01, f"sharded recall {r8:.3f} vs single {r1:.3f}"
+
+# int8 packing through the same mesh
+r1_8 = recall_at_k(ServingIndex.from_index(idx, x, dtype="int8")
+                   .search(q, k=10, beam=32), truth, 10)
+r8_8 = recall_at_k(ServingIndex.from_index(idx, x, mesh=mesh, dtype="int8")
+                   .search(q, k=10, beam=32), truth, 10)
+print(f"  int8: single={r1_8:.3f} sharded(S=8)={r8_8:.3f} "
+      f"delta={r1_8 - r8_8:+.4f}")
+assert r8_8 >= r1_8 - 0.01, f"int8 sharded {r8_8:.3f} vs single {r1_8:.3f}"
+print("sharded serving smoke OK")
 EOF
 
 echo "ALL CHECKS PASSED"

@@ -190,10 +190,109 @@ def beam_search_single(
 # Multi-expansion serving engine
 # ---------------------------------------------------------------------------
 
+KERNEL_PATHS = ("vmem", "hbm", "xla")
+
+
+def resolve_kernel_path(
+    x,
+    scales=None,
+    *,
+    kernel_path: str | None = None,
+    use_pallas: bool | None = None,
+    vmem_budget: int | None = None,
+) -> str:
+    """Resolve which gather-distance implementation serves this points
+    block: ``"vmem"`` (Pallas, points VMEM-resident), ``"hbm"`` (Pallas,
+    points stay in HBM, neighbor rows streamed via async DMA), or
+    ``"xla"`` (``kernels.ref`` gather — the CPU path).
+
+    ``kernel_path`` forces a specific path.  The legacy ``use_pallas``
+    boolean maps ``True`` -> vmem-if-it-fits-else-hbm and ``False`` ->
+    xla.  With neither given: on TPU, ``fits_vmem`` (under
+    ``vmem_budget``, or the env-configurable default) picks vmem vs hbm —
+    an oversized shard now STREAMS instead of silently dropping to the
+    XLA gather; off-TPU the XLA path wins (interpret-mode Pallas is a
+    test vehicle, not a serving path).
+    """
+    if kernel_path is not None:
+        if kernel_path not in KERNEL_PATHS:
+            raise ValueError(f"kernel_path must be one of {KERNEL_PATHS}, "
+                             f"got {kernel_path!r}")
+        return kernel_path
+    from repro.kernels.gather_distance import fits_vmem
+
+    fits = (fits_vmem(x, budget=vmem_budget) if scales is None
+            else fits_vmem(x, scales, budget=vmem_budget))
+    if use_pallas is not None:
+        return ("vmem" if fits else "hbm") if use_pallas else "xla"
+    if jax.default_backend() == "tpu":
+        return "vmem" if fits else "hbm"
+    return "xla"
+
+
+def merge_block(ids, ds, vis, bids, bds):
+    """Fold one [Q, M] candidate block into a sorted [Q, L] beam.
+
+    Rank-based bounded merge — the ``hashprune_merge_segmented``
+    Pallas-row-merge trick, with NO sort anywhere (XLA CPU's variadic
+    sort is the old engine's dominant cost): after deduping, ids are
+    disjoint so (dist, id) keys are strictly ordered and every valid
+    entry's output slot is its rank on its own side plus the count of
+    smaller keys on the other side.  The beam's own rank is its slot
+    index (it stays sorted across merges); the block's comes from one
+    M^2 lex compare.  Visited flags ride along on the beam side; new
+    entries arrive unvisited; slots past the merged count keep the
+    (-1, inf, unvisited) pad.
+
+    Module-level because it is ALSO the cross-shard top-k merge of the
+    sharded serving path (``distributed.serving.cross_shard_topk``):
+    per-shard beams are disjoint id sets, exactly the dedup contract
+    below.  Duplicate candidate ids must carry identical dists (same
+    point, same query, same formula) — keeping the first copy is then
+    exact; ids already in the beam keep the beam's (flagged) copy.
+    """
+    beam = ids.shape[1]
+    m = bids.shape[1]
+    inf = jnp.float32(jnp.inf)
+    iota_l = jnp.arange(beam, dtype=jnp.int32)
+    iota_m = jnp.arange(m, dtype=jnp.int32)
+    lt = lambda d1, i1, d2, i2: (d1 < d2) | ((d1 == d2) & (i1 < i2))
+    dup = jnp.any((bids[:, :, None] == bids[:, None, :])
+                  & (iota_m[None, :] < iota_m[:, None])[None], axis=2)
+    beam_ids = jnp.where(ids >= 0, ids, -2)  # don't match -1 candidates
+    member = jnp.any(bids[:, :, None] == beam_ids[:, None, :], axis=2)
+    bds = jnp.where(dup | member | (bids < 0), inf, bds)
+    va = jnp.isfinite(ds)                    # [Q, L]
+    vb = jnp.isfinite(bds)                   # [Q, M]
+    b_lt_b = lt(bds[:, None, :], bids[:, None, :],
+                bds[:, :, None], bids[:, :, None])      # [Q, M, M']
+    rank_b = jnp.sum(vb[:, None, :] & b_lt_b, axis=2, dtype=jnp.int32)
+    b_lt_a = lt(bds[:, None, :], bids[:, None, :],
+                ds[:, :, None], ids[:, :, None])        # [Q, L, M]
+    pos_a = jnp.where(va, iota_l[None, :] + jnp.sum(
+        vb[:, None, :] & b_lt_a, axis=2, dtype=jnp.int32), beam)
+    pos_b = jnp.where(vb, rank_b + jnp.sum(
+        va[:, :, None] & ~b_lt_a, axis=1, dtype=jnp.int32), beam)
+    # distinct ranks for every valid entry => at most one source per
+    # output slot; positions >= beam fall off the end (the truncation)
+    oh_a = pos_a[:, None, :] == iota_l[None, :, None]   # [Q, L_out, L]
+    oh_b = pos_b[:, None, :] == iota_l[None, :, None]   # [Q, L_out, M]
+    pick_a = jnp.any(oh_a, axis=2)
+    pick_b = jnp.any(oh_b, axis=2)
+    sum_a = lambda v: jnp.sum(jnp.where(oh_a, v[:, None, :], 0), axis=2)
+    sum_b = lambda v: jnp.sum(jnp.where(oh_b, v[:, None, :], 0), axis=2)
+    new_ids = jnp.where(pick_a, sum_a(ids),
+                        jnp.where(pick_b, sum_b(bids), -1))
+    new_ds = jnp.where(pick_a, sum_a(ds),
+                       jnp.where(pick_b, sum_b(bds), inf))
+    new_vis = jnp.any(oh_a & vis[:, None, :], axis=2)
+    return new_ids, new_ds, new_vis
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("beam", "iters", "metric", "expansions", "early_exit",
-                     "use_pallas", "interpret"),
+                     "kernel_path", "interpret"),
 )
 def _beam_search_multi(
     graph: jax.Array,    # [n, R] int32, -1 pad
@@ -208,14 +307,16 @@ def _beam_search_multi(
     metric: str,
     expansions: int,
     early_exit: bool,
-    use_pallas: bool,
+    kernel_path: str,
     interpret: bool,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Batched multi-expansion beam search core.
 
     Returns (ids [Q, beam], dists [Q, beam], hops [Q], dist_comps [Q]).
     ``hops`` counts vertices expanded, ``dist_comps`` distance evaluations
-    (including the entry point).  See ``beam_search_batch`` for semantics.
+    (including the entry point).  ``kernel_path`` selects the distance
+    block implementation ("vmem" | "hbm" | "xla" —
+    ``resolve_kernel_path``).  See ``beam_search_batch`` for semantics.
     """
     n, r = graph.shape
     nq = queries.shape[0]
@@ -226,19 +327,26 @@ def _beam_search_multi(
 
     if scales is not None:
         # int8 scalar-quantized serving: the distance block is the
-        # quantized kernel/oracle pair; query norm terms are computed ONCE
-        # per batch and passed to both sides as DATA (a query is just a
-        # point on the norm side, so point_norms is the one mapping; f32
-        # reductions are not jit/eager bit-stable, so neither side may
+        # quantized kernel/oracle triple; query norm terms are computed
+        # ONCE per batch and passed to every side as DATA (a query is just
+        # a point on the norm side, so point_norms is the one mapping; f32
+        # reductions are not jit/eager bit-stable, so no side may
         # recompute them)
         q_norms = _metrics.point_norms(q32, metric)
-        if use_pallas:
+        if kernel_path == "vmem":
             from repro.kernels.gather_distance import gather_distance_int8
 
             def dist_fn(x, norms, q, ids, metric):
                 return gather_distance_int8(x, scales, norms, q, q_norms,
                                             ids, metric=metric,
                                             interpret=interpret)
+        elif kernel_path == "hbm":
+            from repro.kernels.gather_distance import gather_distance_int8_hbm
+
+            def dist_fn(x, norms, q, ids, metric):
+                return gather_distance_int8_hbm(x, scales, norms, q, q_norms,
+                                                ids, metric=metric,
+                                                interpret=interpret)
         else:
             # the query batch is loop-invariant: quantize it ONCE here
             # instead of per step (row-local + order-independent, so the
@@ -249,10 +357,14 @@ def _beam_search_multi(
                 return _ref.gather_distance_int8_core(x, scales, norms, q8,
                                                       sq, q_norms, ids,
                                                       metric=metric)
-    elif use_pallas:
+    elif kernel_path == "vmem":
         from repro.kernels.gather_distance import gather_distance
 
         dist_fn = functools.partial(gather_distance, interpret=interpret)
+    elif kernel_path == "hbm":
+        from repro.kernels.gather_distance import gather_distance_hbm
+
+        dist_fn = functools.partial(gather_distance_hbm, interpret=interpret)
     else:
         dist_fn = _ref.gather_distance_ref
 
@@ -265,58 +377,6 @@ def _beam_search_multi(
     comps = jnp.ones((nq,), jnp.int32)     # the entry-point distance
 
     rows = jnp.arange(nq)[:, None]
-    iota_l = jnp.arange(beam, dtype=jnp.int32)
-    lt = lambda d1, i1, d2, i2: (d1 < d2) | ((d1 == d2) & (i1 < i2))
-
-    def merge_block(ids, ds, vis, bids, bds):
-        """Fold one [Q, M] candidate block into the sorted beam.
-
-        Rank-based bounded merge — the ``hashprune_merge_segmented``
-        Pallas-row-merge trick, with NO sort anywhere (XLA CPU's variadic
-        sort is the old engine's dominant cost): after deduping, ids are
-        disjoint so (dist, id) keys are strictly ordered and every valid
-        entry's output slot is its rank on its own side plus the count of
-        smaller keys on the other side.  The beam's own rank is its slot
-        index (it stays sorted across merges); the block's comes from one
-        M^2 lex compare.  Visited flags ride along on the beam side; new
-        entries arrive unvisited; slots past the merged count keep the
-        (-1, inf, unvisited) pad.
-        """
-        m = bids.shape[1]
-        iota_m = jnp.arange(m, dtype=jnp.int32)
-        # dedupe: duplicate candidate ids carry identical dists (same
-        # point, same query, same formula) so keeping the first copy is
-        # exact; ids already in the beam keep the beam's (flagged) copy
-        dup = jnp.any((bids[:, :, None] == bids[:, None, :])
-                      & (iota_m[None, :] < iota_m[:, None])[None], axis=2)
-        beam_ids = jnp.where(ids >= 0, ids, -2)  # don't match -1 candidates
-        member = jnp.any(bids[:, :, None] == beam_ids[:, None, :], axis=2)
-        bds = jnp.where(dup | member | (bids < 0), inf, bds)
-        va = jnp.isfinite(ds)                    # [Q, L]
-        vb = jnp.isfinite(bds)                   # [Q, M]
-        b_lt_b = lt(bds[:, None, :], bids[:, None, :],
-                    bds[:, :, None], bids[:, :, None])      # [Q, M, M']
-        rank_b = jnp.sum(vb[:, None, :] & b_lt_b, axis=2, dtype=jnp.int32)
-        b_lt_a = lt(bds[:, None, :], bids[:, None, :],
-                    ds[:, :, None], ids[:, :, None])        # [Q, L, M]
-        pos_a = jnp.where(va, iota_l[None, :] + jnp.sum(
-            vb[:, None, :] & b_lt_a, axis=2, dtype=jnp.int32), beam)
-        pos_b = jnp.where(vb, rank_b + jnp.sum(
-            va[:, :, None] & ~b_lt_a, axis=1, dtype=jnp.int32), beam)
-        # distinct ranks for every valid entry => at most one source per
-        # output slot; positions >= beam fall off the end (the truncation)
-        oh_a = pos_a[:, None, :] == iota_l[None, :, None]   # [Q, L_out, L]
-        oh_b = pos_b[:, None, :] == iota_l[None, :, None]   # [Q, L_out, M]
-        pick_a = jnp.any(oh_a, axis=2)
-        pick_b = jnp.any(oh_b, axis=2)
-        sum_a = lambda v: jnp.sum(jnp.where(oh_a, v[:, None, :], 0), axis=2)
-        sum_b = lambda v: jnp.sum(jnp.where(oh_b, v[:, None, :], 0), axis=2)
-        new_ids = jnp.where(pick_a, sum_a(ids),
-                            jnp.where(pick_b, sum_b(bids), -1))
-        new_ds = jnp.where(pick_a, sum_a(ds),
-                           jnp.where(pick_b, sum_b(bds), inf))
-        new_vis = jnp.any(oh_a & vis[:, None, :], axis=2)
-        return new_ids, new_ds, new_vis
 
     def cond(state):
         t, ids, ds, vis, _, _ = state
@@ -367,6 +427,8 @@ def beam_search_batch(
     scales=None,
     early_exit: bool = True,
     use_pallas: bool | None = None,
+    kernel_path: str | None = None,
+    vmem_budget: int | None = None,
     interpret: bool | None = None,
     with_stats: bool = False,
 ):
@@ -374,8 +436,10 @@ def beam_search_batch(
 
     Each step expands the ``expansions`` best unvisited beam entries at
     once: their ``expansions * R`` neighbors are gathered and scored in one
-    distance block (the fused Pallas gather-distance kernel when
-    ``use_pallas``; auto-enabled on TPU when the points fit VMEM), then
+    distance block — the fused Pallas gather-distance kernel, VMEM-resident
+    when the points fit the budget and HBM-streaming when they don't
+    (``kernel_path`` / ``resolve_kernel_path``; on TPU the Pallas paths
+    auto-enable, the XLA gather is the CPU path) — then
     folded into the always-sorted beam via sort-free rank-based bounded
     merges, one per expanded row — the per-step selection, distance
     dispatch and loop-carry costs are amortized over ``E*R`` candidates
@@ -419,22 +483,18 @@ def beam_search_batch(
         scales = jnp.asarray(scales)
     if iters is None:
         iters = default_iters(beam)
-    if use_pallas is None or interpret is None:
-        on_tpu = jax.default_backend() == "tpu"
-        if use_pallas is None:
-            from repro.kernels.gather_distance import fits_vmem
-
-            use_pallas = on_tpu and (fits_vmem(x) if scales is None
-                                     else fits_vmem(x, scales))
-        if interpret is None:
-            interpret = not on_tpu
+    path = resolve_kernel_path(x, scales, kernel_path=kernel_path,
+                               use_pallas=use_pallas,
+                               vmem_budget=vmem_budget)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     if norms is None:
         norms = _metrics.point_norms(x, metric)
     ids, ds, hops, comps = _beam_search_multi(
         graph, x, jnp.asarray(norms), queries, start, scales,
         beam=beam, iters=int(iters), metric=metric,
         expansions=int(expansions), early_exit=bool(early_exit),
-        use_pallas=bool(use_pallas), interpret=bool(interpret),
+        kernel_path=path, interpret=bool(interpret),
     )
     if with_stats:
         return ids, ds, hops, comps

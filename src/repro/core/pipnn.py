@@ -462,12 +462,17 @@ def build(
     )
 
 
-def serving_index(index: PiPNNIndex, x: np.ndarray, *, dtype=None):
+def serving_index(index: PiPNNIndex, x: np.ndarray, *, dtype=None,
+                  mesh=None):
     """The packed device-resident ``ServingIndex`` for ``(index, x)``,
     cached on the index: the first call uploads graph/points/norms (and
     the int8 scales when ``dtype="int8"``) to the device, every later
     call with the same dataset and graph objects reuses the same device
-    buffers — zero host->device transfers besides the queries.
+    buffers — zero host->device transfers besides the queries.  With
+    ``mesh`` (a single-axis ``jax.sharding.Mesh``) the packing is the
+    sharded ``distributed.serving.ShardedServingIndex`` — one
+    partition-aligned shard per device; the cache keys on the mesh too,
+    so single-device and sharded packings never alias.
 
     The cache holds strong references to ``x`` AND ``index.graph`` and
     keys on object identity (``is``), so a recycled address of a freed
@@ -480,13 +485,14 @@ def serving_index(index: PiPNNIndex, x: np.ndarray, *, dtype=None):
     from repro.core.serving import ServingIndex
 
     key = (index.start, index.params.metric,
-           None if dtype is None else str(dtype))
+           None if dtype is None else str(dtype),
+           None if mesh is None else id(mesh))
     cached = getattr(index, "_serving", None)
     if (cached is not None and getattr(index, "_serving_x", None) is x
             and getattr(index, "_serving_graph", None) is index.graph
             and getattr(index, "_serving_key", None) == key):
         return cached
-    sv = ServingIndex.from_index(index, x, dtype=dtype)
+    sv = ServingIndex.from_index(index, x, dtype=dtype, mesh=mesh)
     index._serving = sv
     index._serving_x = x
     index._serving_graph = index.graph
@@ -505,6 +511,7 @@ def search(
     expansions: int | None = None,
     iters: int | None = None,
     dtype=None,
+    mesh=None,
     with_stats: bool = False,
 ) -> np.ndarray:
     """Query the index; returns [Q, k] neighbor ids, -1-padded when fewer
@@ -520,8 +527,12 @@ def search(
     downcasts the serving points copy (e.g. ``jnp.bfloat16``) or, with
     ``dtype="int8"``, serves the scalar-quantized packing (int8 points +
     per-point f32 scales, ~1/4 the f32 points footprint, int8 MXU
-    distance kernel).  ``with_stats=True`` returns ``(ids, stats)`` with
-    per-query hop/distance-comp telemetry.
+    distance kernel).  ``mesh`` (a single-axis ``jax.sharding.Mesh``)
+    serves through the sharded packing instead: one partition-aligned
+    shard per device under ``shard_map``, per-query results merged across
+    shards (``distributed.serving.ShardedServingIndex``).
+    ``with_stats=True`` returns ``(ids, stats)`` with per-query
+    hop/distance-comp telemetry plus the resolved kernel path.
 
     ``batch=False`` is the pointer-chasing numpy reference
     (``beam_search_np``) — the recall/parity ORACLE, not a serving path:
@@ -533,16 +544,16 @@ def search(
     from repro.core import beam_search as bs
 
     if batch:
-        sv = serving_index(index, x, dtype=dtype)
+        sv = serving_index(index, x, dtype=dtype, mesh=mesh)
         return sv.search(queries, k=k, beam=beam,
                          expansions=4 if expansions is None else expansions,
                          iters=iters, with_stats=with_stats)
     if (with_stats or iters is not None or dtype is not None
-            or expansions is not None):
+            or expansions is not None or mesh is not None):
         raise ValueError(
-            "with_stats / iters / dtype / expansions are serving-path "
-            "options; the batch=False np oracle expands one vertex per "
-            "hop and does not support them")
+            "with_stats / iters / dtype / expansions / mesh are serving-"
+            "path options; the batch=False np oracle expands one vertex "
+            "per hop and does not support them")
     out = np.empty((queries.shape[0], k), dtype=np.int64)
     for i, q in enumerate(queries):
         ids, _, _ = bs.beam_search_np(

@@ -27,12 +27,41 @@ batch as soon as every query's live beam is fully visited (``iters`` is
 only a backstop cap).  After construction a ``search`` call transfers
 nothing but the queries.
 
+**Kernel selection (VMEM vs HBM vs XLA).**  The distance block has three
+implementations, resolved per points block by
+``beam_search.resolve_kernel_path`` and surfaced as
+``ServingIndex.kernel_path`` (and in ``with_stats`` telemetry):
+
+  * ``"vmem"`` — Pallas kernel with the whole points block VMEM-resident;
+    requires ``fits_vmem(points[, scales])`` under the budget
+    (``vmem_budget`` here, or the ``PIPNN_VMEM_POINTS_BUDGET`` env
+    override, default 8 MiB).  The fastest path when it fits.
+  * ``"hbm"``  — Pallas HBM-streaming kernel: points stay in HBM and each
+    query row's neighbor rows arrive in VMEM scratch via double-buffered
+    async DMAs.  Selected on TPU when the shard exceeds the budget — an
+    oversized shard STREAMS instead of silently dropping to XLA.
+  * ``"xla"``  — the ``kernels.ref`` gather oracle; the CPU path.
+
+**Shard routing (mesh serving).**  ``from_index(..., mesh=...)`` /
+``from_graph(..., mesh=...)`` build a ``distributed.serving.
+ShardedServingIndex`` instead: the dataset is split into DISJOINT
+partition-aligned shards (each point joins its nearest shard leader —
+the Stage-1 ``leader_assign`` primitive), each device holds one shard's
+induced subgraph + points and runs the unchanged per-shard beam search
+under ``shard_map``, and per-query results merge across shards with the
+same rank-based bounded merge the beam uses.  Queries are replicated to
+all shards by default (``router="all"`` — the recall-parity
+configuration); ``router="leaders"`` probes only each query's
+``n_probes`` nearest shards.  See ``distributed/serving.py`` for the
+full contract.
+
 ``pipnn.search`` caches one ``ServingIndex`` per (index, dataset) behind
 the scenes; hold your own instance for long-lived serving processes.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any
 
 import jax
@@ -40,6 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as _metrics
+
+logger = logging.getLogger(__name__)
 
 
 def _is_int8(dtype) -> bool:
@@ -63,6 +94,7 @@ class ServingIndex:
     start: int                # entry point (medoid)
     metric: str = "l2"
     scales: jax.Array | None = None   # [n] f32 dequant scales (int8 packing)
+    vmem_budget: int | None = None    # VMEM points budget override (bytes)
 
     @property
     def n(self) -> int:
@@ -71,6 +103,18 @@ class ServingIndex:
     @property
     def degree_bound(self) -> int:
         return self.graph.shape[1]
+
+    @property
+    def kernel_path(self) -> str:
+        """The distance-kernel path this index auto-selects on the current
+        backend: "vmem" (Pallas, points VMEM-resident under
+        ``vmem_budget``), "hbm" (Pallas, HBM-streaming DMA), or "xla"
+        (the ref gather — the CPU path).  An explicit
+        ``search(kernel_path=...)`` / ``use_pallas=...`` overrides it."""
+        from repro.core import beam_search as _bs
+
+        return _bs.resolve_kernel_path(self.points, self.scales,
+                                       vmem_budget=self.vmem_budget)
 
     def device_bytes(self) -> int:
         """Actual device-resident footprint of the packed index (graph +
@@ -88,14 +132,34 @@ class ServingIndex:
         *,
         metric: str = "l2",
         dtype=None,
-    ) -> "ServingIndex":
+        vmem_budget: int | None = None,
+        mesh=None,
+        **shard_kw,
+    ):
         """Pack an adjacency matrix + points for serving.  ``dtype`` (e.g.
         ``jnp.bfloat16``) downcasts the device points copy; norms are
         computed in f32 first.  ``dtype="int8"`` (or ``jnp.int8``) packs
         the scalar-quantized serving copy instead: per-point symmetric
         int8 vectors + f32 dequant scales (``kernels.ref.
         quantize_symmetric``), ~1/4 the points footprint, with the norm
-        half of every distance kept EXACT from the f32 norms."""
+        half of every distance kept EXACT from the f32 norms.
+
+        ``vmem_budget`` overrides the VMEM points budget the kernel-path
+        auto-selection checks against (bytes; default 8 MiB or the
+        ``PIPNN_VMEM_POINTS_BUDGET`` env var).  ``mesh`` (a single-axis
+        ``jax.sharding.Mesh``) packs a sharded
+        ``distributed.serving.ShardedServingIndex`` instead — one
+        partition-aligned shard per device; extra ``shard_kw`` (router,
+        n_probes, seed) pass through to it."""
+        if mesh is not None:
+            from repro.distributed.serving import ShardedServingIndex
+
+            return ShardedServingIndex.from_graph(
+                graph, x, start, mesh=mesh, metric=metric, dtype=dtype,
+                vmem_budget=vmem_budget, **shard_kw)
+        if shard_kw:
+            raise TypeError(f"single-device serving does not accept "
+                            f"{sorted(shard_kw)} (mesh-only options)")
         gj = jnp.asarray(np.ascontiguousarray(graph), dtype=jnp.int32)
         xj = jnp.asarray(np.ascontiguousarray(x, dtype=np.float32))
         norms = _metrics.point_norms(xj, metric)
@@ -106,15 +170,30 @@ class ServingIndex:
             xj, scales = quantize_symmetric(xj)
         elif dtype is not None:
             xj = xj.astype(dtype)
-        return cls(graph=gj, points=xj, norms=norms, start=int(start),
-                   metric=metric, scales=scales)
+        sv = cls(graph=gj, points=xj, norms=norms, start=int(start),
+                 metric=metric, scales=scales, vmem_budget=vmem_budget)
+        # the one-time signal the silent-XLA-fallback era lacked: say which
+        # distance path this packing serves through, and why
+        from repro.kernels.gather_distance import vmem_points_budget
+
+        logger.info(
+            "ServingIndex packed: n=%d d=%d dtype=%s kernel_path=%s "
+            "(points %d bytes, vmem budget %d)", sv.n, xj.shape[1],
+            xj.dtype, sv.kernel_path, sv.device_bytes(),
+            vmem_points_budget() if sv.vmem_budget is None
+            else sv.vmem_budget)
+        return sv
 
     @classmethod
-    def from_index(cls, index, x: np.ndarray, *, dtype=None) -> "ServingIndex":
+    def from_index(cls, index, x: np.ndarray, *, dtype=None,
+                   vmem_budget: int | None = None, mesh=None, **shard_kw):
         """Pack a ``PiPNNIndex`` (or any object with ``.graph``, ``.start``
-        and ``.params.metric``) over its dataset ``x``."""
+        and ``.params.metric``) over its dataset ``x``.  With ``mesh``
+        this returns the sharded packing (``ShardedServingIndex``) — one
+        partition-aligned shard per mesh device."""
         return cls.from_graph(index.graph, x, index.start,
-                              metric=index.params.metric, dtype=dtype)
+                              metric=index.params.metric, dtype=dtype,
+                              vmem_budget=vmem_budget, mesh=mesh, **shard_kw)
 
     def search(
         self,
@@ -126,6 +205,7 @@ class ServingIndex:
         iters: int | None = None,
         early_exit: bool = True,
         use_pallas: bool | None = None,
+        kernel_path: str | None = None,
         interpret: bool | None = None,
         query_chunk: int | None = None,
         with_stats: bool = False,
@@ -138,9 +218,12 @@ class ServingIndex:
         loop stops as soon as every query converged, so raising the cap is
         free.  ``query_chunk`` bounds the per-dispatch batch (chunks are
         zero-padded to a fixed shape so every chunk reuses one compiled
-        executable).  ``with_stats=True`` also returns a dict with
-        per-query ``hops`` (vertices expanded) and ``dist_comps``
-        (distance evaluations) telemetry.
+        executable).  ``kernel_path`` forces a distance-kernel path
+        ("vmem" | "hbm" | "xla"; default: the index's auto-selection —
+        see ``ServingIndex.kernel_path``).  ``with_stats=True`` also
+        returns a dict with per-query ``hops`` (vertices expanded) and
+        ``dist_comps`` (distance evaluations) telemetry, plus the
+        resolved ``kernel_path`` the batch actually served through.
         """
         from repro.core import beam_search as _bs
 
@@ -148,6 +231,10 @@ class ServingIndex:
         nq = q.shape[0]
         iters_cap = int(iters if iters is not None
                         else _bs.default_iters(beam))
+        path = _bs.resolve_kernel_path(self.points, self.scales,
+                                       kernel_path=kernel_path,
+                                       use_pallas=use_pallas,
+                                       vmem_budget=self.vmem_budget)
         if nq == 0:
             # short-circuit: never pad an empty batch up to a 1-row chunk
             # and dispatch a full device search for zero queries
@@ -158,6 +245,7 @@ class ServingIndex:
                     "dist_comps": np.empty((0,), np.int32),
                     "expansions": int(expansions),
                     "iters_cap": iters_cap,
+                    "kernel_path": path,
                 }
             return out
         chunk = nq if not query_chunk else min(int(query_chunk), nq)
@@ -171,7 +259,7 @@ class ServingIndex:
                 self.graph, self.points, qc,
                 start=self.start, beam=beam, iters=iters, metric=self.metric,
                 expansions=expansions, norms=self.norms, scales=self.scales,
-                early_exit=early_exit, use_pallas=use_pallas,
+                early_exit=early_exit, kernel_path=path,
                 interpret=interpret, with_stats=True,
             )
             take = chunk - pad
@@ -187,6 +275,7 @@ class ServingIndex:
                 "dist_comps": np.concatenate(comps_parts),
                 "expansions": int(expansions),
                 "iters_cap": iters_cap,
+                "kernel_path": path,
             }
             return out, stats
         return out

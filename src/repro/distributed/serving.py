@@ -1,0 +1,431 @@
+"""Sharded SPMD serving: one partition-aligned index shard per device.
+
+The single-device ``core.serving.ServingIndex`` tops out at whatever one
+device can hold; the paper's billion-scale regime (and GGNN / the
+multi-GPU indexing line in PAPERS.md) shard the index across devices and
+merge per-shard results.  ``ShardedServingIndex`` is that serving shape,
+built from the primitives the repo already has:
+
+  * **Partition-aligned shards with a 1-hop halo.**  Every point joins
+    the shard of its nearest shard leader (``core.leader_assign`` — the
+    same Stage-1 RBC assignment primitive the build uses), so ownership
+    is a DISJOINT partition and locality-preserving: most graph edges
+    stay intra-shard.  Each shard then also carries GHOST rows — the
+    out-of-shard endpoints of its members' edges — so NO graph edge is
+    dropped (the GGNN-style halo): member rows keep their full neighbor
+    lists under LOCAL renumbering, ghost rows keep whichever of their
+    own edges happen to land in-shard.  Each shard has its own entry
+    point (the owned member nearest the global entry) and a ``gids`` map
+    back to global ids; shards pad to the largest row count so the
+    stacked ``[S, m, ...]`` arrays are fixed-shape.
+  * **Per-shard search under ``shard_map``.**  Each device runs the
+    UNCHANGED multi-expansion beam search (``_beam_search_multi``) over
+    its shard — same kernels (VMEM-resident or HBM-streaming per the
+    shard's size, see ``beam_search.resolve_kernel_path``), same early
+    exit — then maps beam ids local -> global through ``gids``.
+  * **Query routing.**  ``router="all"`` (default) replicates every query
+    to every shard — the recall-parity configuration: the merged result
+    can only see MORE of the graph than a single-device search.
+    ``router="leaders"`` probes only each query's ``n_probes`` nearest
+    shard leaders (``leader_assign`` again, now as the query router) and
+    masks the other shards' results out of the merge — the
+    throughput-over-recall trade.
+  * **Cross-shard top-k merge.**  A global id reaching two shards' beams
+    (a halo replica) carries BIT-IDENTICAL distances on both — same row
+    values, same query, same padded reduction extent — which is exactly
+    the dedup contract of the engine's rank-based bounded merge
+    (``beam_search.merge_block``): ``cross_shard_topk`` folds the ``S``
+    beams into one sorted [Q, k] block with no sort anywhere.
+
+``ServingIndex.from_index(..., mesh=...)``, ``pipnn.search(mesh=...)``
+and ``launch.serve.Retriever(mesh=...)`` all route here.  On this
+container the mesh is simulated CPU devices
+(``--xla_force_host_platform_device_count``); the shard_map program is
+identical on a real TPU pod slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import metrics as _metrics
+from repro.distributed.compat import shard_map_norep
+
+ROUTERS = ("all", "leaders")
+
+
+def _dist_to_point(x: np.ndarray, p: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side dissimilarity of every row of ``x`` to the single point
+    ``p`` (entry-point selection; mirrors ``beam_search._dist_np``)."""
+    ip = x @ p
+    if metric == "mips":
+        return -ip
+    if metric == "cosine":
+        return 1.0 - ip / np.maximum(
+            np.linalg.norm(x, axis=1) * np.linalg.norm(p), 1e-30)
+    return np.sum(x * x, axis=1) + p @ p - 2.0 * ip
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cross_shard_topk(ids_s: jax.Array, ds_s: jax.Array, *, k: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard result blocks into the global top-k.
+
+    ``ids_s`` [S, Q, B] global ids (-1 = pad / masked), ``ds_s`` [S, Q, B]
+    f32 (+inf at pads) -> (ids [Q, k], dists [Q, k]) sorted ascending by
+    (dist, id) — ties break toward the smaller global id, padded with
+    (-1, +inf) when fewer than ``k`` valid entries exist in the union.
+
+    Built from the engine's own sort-free rank-based bounded merge
+    (``beam_search.merge_block``): shard ownership partitions the
+    dataset, and a halo replica reaching two shards' beams carries
+    bit-identical distances on both (same row values, same query, same
+    padded reduction extent) — exactly the merge's dedup contract, so
+    folding one block at a time into a k-bounded beam is exact.  ``k``
+    may exceed the per-shard beam width B — the union supplies up to
+    ``S * B`` entries.
+    """
+    from repro.core.beam_search import merge_block
+
+    s, nq, _ = ids_s.shape
+    ids = jnp.full((nq, k), -1, jnp.int32)
+    ds = jnp.full((nq, k), jnp.inf, jnp.float32)
+    vis = jnp.zeros((nq, k), dtype=bool)
+    for i in range(s):
+        ids, ds, vis = merge_block(ids, ds, vis,
+                                   ids_s[i].astype(jnp.int32), ds_s[i])
+    return ids, ds
+
+
+@dataclasses.dataclass
+class ShardedServingIndex:
+    """A PiPNN index packed as one partition-aligned shard per device.
+
+    All shard arrays are stacked on a leading shard axis ``[S, ...]`` and
+    consumed through ``shard_map`` over the single-axis ``mesh``; ``-1``
+    pads everywhere (gids, local graph ids).
+    """
+
+    gids: jax.Array           # [S, m] int32 global ids, -1 pad
+    graph: jax.Array          # [S, m, R] int32 LOCAL neighbor ids, -1 pad
+    points: jax.Array         # [S, m, d] (f32 / downcast / int8)
+    norms: jax.Array          # [S, m] f32 point norms (pre-downcast)
+    starts: jax.Array         # [S] int32 per-shard local entry point
+    leaders: jax.Array        # [S, d] f32 shard leader vectors (router)
+    mesh: Mesh
+    metric: str = "l2"
+    scales: jax.Array | None = None   # [S, m] f32 dequant scales (int8)
+    router: str = "all"
+    n_probes: int = 2
+    vmem_budget: int | None = None
+    n_points: int = 0         # dataset size (each point OWNED by 1 shard)
+    _search_cache: dict = dataclasses.field(default_factory=dict,
+                                            repr=False, compare=False)
+
+    # ------------------------------------------------------------- sizing --
+    @property
+    def n_shards(self) -> int:
+        return self.gids.shape[0]
+
+    @property
+    def shard_capacity(self) -> int:
+        return self.gids.shape[1]
+
+    @property
+    def n(self) -> int:
+        """Dataset size.  Live rows across shards exceed this by the halo
+        replicas — count ``gids >= 0`` for the physical total."""
+        return self.n_points
+
+    @property
+    def axis(self) -> str:
+        return self.mesh.axis_names[0]
+
+    @property
+    def kernel_path(self) -> str:
+        """The distance-kernel path each shard auto-selects, judged on the
+        PER-SHARD [m, d] points block — the whole reason to shard is that
+        the budget applies per device, not to the global index."""
+        from repro.core import beam_search as _bs
+
+        return _bs.resolve_kernel_path(
+            self.points[0],
+            None if self.scales is None else self.scales[0],
+            vmem_budget=self.vmem_budget)
+
+    def device_bytes(self, per_shard: bool = False) -> int:
+        """Device-resident footprint: the full stacked packing, or (with
+        ``per_shard=True``) ONE shard's slice — what a single device
+        actually holds under the mesh."""
+        parts = (self.gids, self.graph, self.points, self.norms,
+                 self.starts, self.leaders) + (
+            () if self.scales is None else (self.scales,))
+        total = sum(int(a.size) * a.dtype.itemsize for a in parts)
+        return total // self.n_shards if per_shard else total
+
+    # ------------------------------------------------------------ packing --
+    @classmethod
+    def from_graph(
+        cls,
+        graph: np.ndarray,
+        x: np.ndarray,
+        start: int,
+        *,
+        mesh: Mesh,
+        metric: str = "l2",
+        dtype=None,
+        vmem_budget: int | None = None,
+        router: str = "all",
+        n_probes: int = 2,
+        seed: int = 0,
+        halo: bool = True,
+    ) -> "ShardedServingIndex":
+        """Shard an adjacency matrix + dataset across ``mesh``'s devices.
+
+        ``mesh`` must have a single axis; one shard per device.  Leaders
+        are a deterministic sample of ``S`` dataset points (``seed``);
+        every point joins its top-1 nearest leader (``leader_assign`` —
+        ties toward the smaller leader index).  With ``halo`` (default)
+        each shard also carries its members' out-of-shard neighbors as
+        ghost rows so no graph edge is dropped; ``halo=False`` keeps the
+        bare induced subgraph (smaller, lower recall).  Each shard's
+        entry point is its OWNED member nearest the global entry
+        ``x[start]``.  ``dtype`` follows the single-device packing:
+        ``None``/f32, a downcast dtype (e.g. bf16), or ``"int8"`` for
+        the scalar-quantized copy (quantization is per-point/row-local,
+        so sharding cannot change the bits — a ghost row quantizes
+        identically in every shard that holds it).
+        """
+        from repro.core.leader_assign import leader_assign
+        from repro.core.serving import _is_int8
+
+        if len(mesh.axis_names) != 1:
+            raise ValueError(f"serving mesh must have exactly one axis, "
+                             f"got {mesh.axis_names}")
+        if router not in ROUTERS:
+            raise ValueError(f"router must be one of {ROUTERS}, "
+                             f"got {router!r}")
+        s = int(np.prod(mesh.devices.shape))
+        x = np.ascontiguousarray(x, dtype=np.float32)
+        graph = np.ascontiguousarray(graph, dtype=np.int32)
+        n, d = x.shape
+        r = graph.shape[1]
+        if n < s:
+            raise ValueError(f"cannot shard {n} points over {s} devices")
+        rng = np.random.default_rng(seed)
+        leader_ids = np.sort(rng.choice(n, size=s, replace=False))
+        leaders = x[leader_ids]
+        assign = np.asarray(leader_assign(
+            jnp.asarray(x), jnp.asarray(leaders), 1, metric=metric))[:, 0]
+        # per-shard row lists: owned members (ascending global id) first,
+        # then the 1-hop halo — every out-of-shard endpoint of a member's
+        # edge rides along as a ghost row, so no edge is dropped
+        rows, owned = [], np.zeros(s, np.int64)
+        for i in range(s):
+            mem = np.where(assign == i)[0]
+            owned[i] = len(mem)
+            if halo and len(mem):
+                flat = graph[mem]
+                flat = flat[flat >= 0]
+                ghosts = np.unique(flat[assign[flat] != i])
+            else:
+                ghosts = np.empty(0, np.int64)
+            rows.append(np.concatenate([mem, ghosts]))
+        m = max(1, max(len(ridx) for ridx in rows))
+        gids = np.full((s, m), -1, np.int32)
+        graph_s = np.full((s, m, r), -1, np.int32)
+        norms_s = np.zeros((s, m), np.float32)
+        # norms in f32 BEFORE any downcast/quantization (the exact-norm
+        # trick carries over shard by shard)
+        norms = np.asarray(_metrics.point_norms(jnp.asarray(x), metric))
+        int8 = _is_int8(dtype)
+        if int8:
+            from repro.kernels.ref import quantize_symmetric
+
+            x8, scl = quantize_symmetric(jnp.asarray(x))
+            xp, scl = np.asarray(x8), np.asarray(scl)
+            pts_s = np.zeros((s, m, d), np.int8)
+            # pad scales with 1.0, not 0.0: pad rows are all-zero int8
+            # vectors, and a zero scale would be the only 0.0 the kernels'
+            # rescale path ever sees
+            scales_np = np.ones((s, m), np.float32)
+        else:
+            xp = x
+            pts_s = np.zeros((s, m, d), np.float32)
+        lookup = np.full(n, -1, np.int64)
+        for i, ridx in enumerate(rows):
+            c = len(ridx)
+            gids[i, :c] = ridx
+            lookup[:] = -1
+            lookup[ridx] = np.arange(c)
+            ga = graph[ridx]
+            # member rows: every edge endpoint is in-shard by halo
+            # construction; ghost rows keep whichever of their own edges
+            # happen to land in-shard
+            graph_s[i, :c] = np.where(ga >= 0, lookup[np.maximum(ga, 0)], -1)
+            norms_s[i, :c] = norms[ridx]
+            pts_s[i, :c] = xp[ridx]
+            if int8:
+                scales_np[i, :c] = scl[ridx]
+        scales_s = jnp.asarray(scales_np) if int8 else None
+        pts_j = jnp.asarray(pts_s)
+        if dtype is not None and not int8:
+            pts_j = pts_j.astype(dtype)
+        # per-shard entry: the OWNED member nearest the global entry point
+        # (owned rows come first, so the argmin's position IS its local id)
+        dstart = _dist_to_point(x, x[start], metric)
+        starts_local = np.zeros(s, np.int32)
+        for i in range(s):
+            mem = rows[i][: owned[i]]
+            if len(mem):
+                starts_local[i] = np.argmin(dstart[mem])
+        return cls(
+            gids=jnp.asarray(gids),
+            graph=jnp.asarray(graph_s),
+            points=pts_j,
+            norms=jnp.asarray(norms_s),
+            starts=jnp.asarray(starts_local),
+            leaders=jnp.asarray(leaders),
+            mesh=mesh, metric=metric, scales=scales_s,
+            router=router, n_probes=int(n_probes), vmem_budget=vmem_budget,
+            n_points=n,
+        )
+
+    @classmethod
+    def from_index(cls, index, x: np.ndarray, *, mesh: Mesh, dtype=None,
+                   **kw) -> "ShardedServingIndex":
+        return cls.from_graph(index.graph, x, index.start, mesh=mesh,
+                              metric=index.params.metric, dtype=dtype, **kw)
+
+    # ------------------------------------------------------------- search --
+    def _sharded_search_fn(self, *, beam, iters, expansions, early_exit,
+                           kernel_path, interpret):
+        """Compile (and cache) the shard_map'd per-shard search: every
+        device runs the unchanged multi-expansion engine over its own
+        shard and maps beam ids local -> global through its gids slice."""
+        key = (beam, iters, expansions, early_exit, kernel_path, interpret,
+               self.scales is not None)
+        fn = self._search_cache.get(key)
+        if fn is not None:
+            return fn
+        from repro.core.beam_search import _beam_search_multi
+
+        int8 = self.scales is not None
+
+        def body(gids, graph, points, norms, starts, scales, queries):
+            ids, ds, hops, comps = _beam_search_multi(
+                graph[0], points[0], norms[0], queries, starts[0],
+                scales[0] if int8 else None,
+                beam=beam, iters=iters, metric=self.metric,
+                expansions=expansions, early_exit=early_exit,
+                kernel_path=kernel_path, interpret=interpret)
+            g = gids[0]
+            gid = jnp.where(ids >= 0, g[jnp.maximum(ids, 0)], -1)
+            # a pad entry point (empty shard) carries gid -1: push its
+            # distance to +inf so the cross-shard merge drops it
+            ds = jnp.where(gid >= 0, ds, jnp.inf)
+            return gid[None], ds[None], hops[None], comps[None]
+
+        p, rep = P(self.axis), P()
+        sm = shard_map_norep(
+            body, mesh=self.mesh,
+            in_specs=(p, p, p, p, p, p, rep),
+            out_specs=(p, p, p, p))
+        fn = jax.jit(sm)
+        self._search_cache[key] = fn
+        return fn
+
+    def _route_mask(self, queries: jax.Array) -> jax.Array | None:
+        """[S, Q] bool — which shards serve which query (None: all)."""
+        if self.router == "all":
+            return None
+        from repro.core.leader_assign import leader_assign
+
+        probes = min(int(self.n_probes), self.n_shards)
+        probe = leader_assign(queries, self.leaders, probes,
+                              metric=self.metric)          # [Q, probes]
+        sids = jnp.arange(self.n_shards, dtype=probe.dtype)
+        return jnp.any(probe[None, :, :] == sids[:, None, None], axis=2)
+
+    def search(
+        self,
+        queries: np.ndarray,
+        *,
+        k: int = 10,
+        beam: int = 32,
+        expansions: int = 4,
+        iters: int | None = None,
+        early_exit: bool = True,
+        kernel_path: str | None = None,
+        interpret: bool | None = None,
+        with_stats: bool = False,
+    ):
+        """Serve a query batch over the mesh; [Q, k] global ids (int64,
+        -1-padded).  Semantics mirror ``ServingIndex.search``: per shard
+        the multi-expansion beam search runs unchanged (``beam`` is the
+        PER-SHARD beam width), then the ``router`` decides which shards'
+        beams enter the cross-shard top-k merge.  ``with_stats=True``
+        adds per-query telemetry summed over the shards that served the
+        query, plus the resolved kernel path and routing settings.
+        """
+        from repro.core import beam_search as _bs
+
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        nq = q.shape[0]
+        iters_cap = int(iters if iters is not None
+                        else _bs.default_iters(beam))
+        path = _bs.resolve_kernel_path(
+            self.points[0],
+            None if self.scales is None else self.scales[0],
+            kernel_path=kernel_path, vmem_budget=self.vmem_budget)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if nq == 0:
+            out = np.full((0, k), -1, dtype=np.int64)
+            if with_stats:
+                return out, self._stats(np.empty((0,), np.int32),
+                                        np.empty((0,), np.int32),
+                                        expansions, iters_cap, path)
+            return out
+        fn = self._sharded_search_fn(
+            beam=beam, iters=iters_cap, expansions=int(expansions),
+            early_exit=bool(early_exit), kernel_path=path,
+            interpret=bool(interpret))
+        scales = (self.scales if self.scales is not None
+                  else jnp.zeros((self.n_shards, 1), jnp.float32))
+        qj = jnp.asarray(q)
+        ids_s, ds_s, hops_s, comps_s = fn(
+            self.gids, self.graph, self.points, self.norms, self.starts,
+            scales, qj)                                    # [S, Q, B] / [S, Q]
+        active = self._route_mask(qj)
+        if active is not None:
+            ids_s = jnp.where(active[:, :, None], ids_s, -1)
+            ds_s = jnp.where(active[:, :, None], ds_s, jnp.inf)
+            hops_s = jnp.where(active, hops_s, 0)
+            comps_s = jnp.where(active, comps_s, 0)
+        ids, _ = cross_shard_topk(ids_s, ds_s, k=k)
+        out = _bs.pad_ids(np.asarray(ids), k).astype(np.int64)
+        if with_stats:
+            return out, self._stats(
+                np.asarray(jnp.sum(hops_s, axis=0, dtype=jnp.int32)),
+                np.asarray(jnp.sum(comps_s, axis=0, dtype=jnp.int32)),
+                expansions, iters_cap, path)
+        return out
+
+    def _stats(self, hops, comps, expansions, iters_cap, path
+               ) -> dict[str, Any]:
+        return {
+            "hops": hops,
+            "dist_comps": comps,
+            "expansions": int(expansions),
+            "iters_cap": int(iters_cap),
+            "kernel_path": path,
+            "n_shards": self.n_shards,
+            "router": self.router,
+        }

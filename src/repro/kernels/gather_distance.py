@@ -17,26 +17,39 @@ per step the kernel
 
 The points block is replicated to every grid step, so the compiler keeps
 one VMEM-resident copy: this kernel targets serving shards whose points
-fit VMEM (``fits_vmem``); larger shards use the XLA fallback
-(``kernels.ref.gather_distance_ref``), which streams the gather from HBM.
-``beam_search_batch(use_pallas=...)`` auto-enables it on TPU exactly like
-``edge_hash`` / ``segmented_merge``, and it is interpret-mode tested
-against the oracle on CPU.
+fit VMEM (``fits_vmem``).  Larger shards use the HBM-streaming twins
+(``gather_distance_hbm`` / ``gather_distance_int8_hbm``): points stay in
+HBM (``TPUMemorySpace.ANY``) and each query row's neighbor rows arrive in
+VMEM scratch via double-buffered ``pltpu.make_async_copy`` DMAs — while
+row ``t`` computes its distances the row ``t+1`` copies are already in
+flight.  The serving engine's kernel-path resolution
+(``beam_search.resolve_kernel_path``) selects vmem vs hbm per shard size
+instead of silently dropping to the XLA gather
+(``kernels.ref.gather_distance_ref``), which remains the CPU path.  All
+four kernels are interpret-mode tested against their oracles on CPU.
 
 ``gather_distance_int8`` is the scalar-quantized twin (paper Sec. 6:
 "quantized GEMM operations on scalar-quantized points"): int8 points +
 per-point f32 scales packed by ``ServingIndex(dtype="int8")``, int8 x int8
 -> int32 batched matvec on the MXU, fused rescale + exact-norm expansion.
 The 4x-smaller points block means ``fits_vmem`` admits shards 4x larger
-before the HBM-streaming fallback is ever needed.
+before HBM streaming is needed — and once it is, the int8 packing also
+cuts the streamed DMA bytes 4x per row.
+
+The VMEM points budget is configurable: ``fits_vmem(budget=...)`` per
+call (``ServingIndex(vmem_budget=...)`` threads it through), or the
+``PIPNN_VMEM_POINTS_BUDGET`` environment variable to override the
+default globally.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref as _ref
 
@@ -49,15 +62,27 @@ _SUBLANE_I8 = 32  # int8 sublane tile: the packed points block pads rows to 32
 _VMEM_POINTS_BUDGET = 8 * 1024 * 1024
 
 
+def vmem_points_budget() -> int:
+    """The effective VMEM points budget in bytes: the
+    ``PIPNN_VMEM_POINTS_BUDGET`` environment variable when set, else the
+    8 MiB default.  Read per call so tests (and deployments sizing for a
+    different accelerator generation) can adjust it without reimports."""
+    env = os.environ.get("PIPNN_VMEM_POINTS_BUDGET", "")
+    return int(env) if env else _VMEM_POINTS_BUDGET
+
+
 def fits_vmem(points: jax.Array, *extras: jax.Array,
-              budget: int = _VMEM_POINTS_BUDGET) -> bool:
+              budget: int | None = None) -> bool:
     """True when the points block (plus any ``extras`` that must ride along
     VMEM-resident, e.g. the int8 packing's per-point scales) fits the
-    budget.  The check is itemsize-aware, so an int8 serving copy gets 4x
-    the f32 headroom: a shard that needed the HBM-streaming fallback at
-    f32 may serve fully VMEM-resident once scalar-quantized."""
+    budget (``None``: ``vmem_points_budget()``).  The check is
+    itemsize-aware, so an int8 serving copy gets 4x the f32 headroom: a
+    shard that needed HBM streaming at f32 may serve fully VMEM-resident
+    once scalar-quantized."""
+    if budget is None:
+        budget = vmem_points_budget()
     total = sum(int(a.size) * a.dtype.itemsize for a in (points,) + extras)
-    return total <= budget
+    return total <= int(budget)
 
 
 def _gather_distance_kernel(q_ref, ids_ref, pts_ref, n2_ref, o_ref, *,
@@ -231,4 +256,232 @@ def gather_distance_int8(
         out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
         interpret=interpret,
     )(queries, nbr_ids, points, scales, norms, qa)
+    return out[:nq, :c]
+
+
+# ---------------------------------------------------------------------------
+# HBM-streaming kernels: points stay in HBM, neighbor rows are DMA'd
+# ---------------------------------------------------------------------------
+
+def _row_copies(pts_hbm, ids_ref, scratch, sem, slot, t, cp):
+    """The ``cp`` single-row HBM->VMEM async copies for query row ``t``
+    into scratch buffer ``slot``.  ``.start()`` and ``.wait()`` must see
+    the SAME copy descriptors, so both phases rebuild them through here;
+    -1 ids fetch row 0 (their output is masked to +inf afterwards)."""
+    def one(c, _):
+        sid = jnp.maximum(ids_ref[t, c], 0)
+        copy = pltpu.make_async_copy(
+            pts_hbm.at[pl.ds(sid, 1), :],
+            scratch.at[slot, pl.ds(c, 1), :],
+            sem.at[slot],
+        )
+        return copy
+
+    return one
+
+
+def _stream_rows(pts_hbm, ids_ref, scratch, sem, tq, cp, compute_row):
+    """Double-buffered row loop shared by both HBM kernels: issue row 0's
+    copies, then per row prefetch row ``t+1`` into the other buffer,
+    drain row ``t``, and hand its gathered block to ``compute_row``."""
+    def issue(slot, t):
+        def one(c, carry):
+            _row_copies(pts_hbm, ids_ref, scratch, sem, slot, t, cp)(
+                c, None).start()
+            return carry
+        jax.lax.fori_loop(0, cp, one, 0)
+
+    def drain(slot, t):
+        def one(c, carry):
+            _row_copies(pts_hbm, ids_ref, scratch, sem, slot, t, cp)(
+                c, None).wait()
+            return carry
+        jax.lax.fori_loop(0, cp, one, 0)
+
+    issue(0, 0)
+
+    def body(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < tq)
+        def _prefetch_next():
+            issue(jax.lax.rem(t + 1, 2), t + 1)
+
+        drain(slot, t)
+        compute_row(t, scratch[slot])
+        return carry
+
+    jax.lax.fori_loop(0, tq, body, 0)
+
+
+def _gather_distance_hbm_kernel(q_ref, ids_ref, n2g_ref, pts_hbm, o_ref,
+                                scratch, sem, *, metric: str):
+    tq, cp = ids_ref.shape
+
+    def compute_row(t, g):                       # g: [Cp, dp] gathered rows
+        q = q_ref[t, :].astype(jnp.float32)      # [dp]
+        ids = ids_ref[t, :]
+        ip = jnp.sum(g.astype(jnp.float32) * q[None, :], axis=-1)   # [Cp]
+        n2 = n2g_ref[t, :]                       # pre-gathered norms
+        if metric == "mips":
+            d = -ip
+        elif metric == "cosine":
+            qn = jnp.sqrt(jnp.sum(q * q))
+            d = 1.0 - ip / jnp.maximum(qn * n2, 1e-30)
+        else:
+            q2 = jnp.sum(q * q)
+            d = jnp.maximum(q2 + n2 - 2.0 * ip, 0.0)
+        o_ref[pl.ds(t, 1), :] = jnp.where(ids >= 0, d, jnp.inf)[None]
+
+    _stream_rows(pts_hbm, ids_ref, scratch, sem, tq, cp, compute_row)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tq", "interpret"))
+def gather_distance_hbm(
+    points: jax.Array,   # [n, d] (f32 or downcast serving copy) — stays in HBM
+    norms: jax.Array,    # [n] f32 metric-dependent norms (metrics.point_norms)
+    queries: jax.Array,  # [Q, d]
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+    tq: int = _TQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """HBM-streaming gather-distance block [Q, C] f32; +inf at ``-1`` ids.
+
+    The over-VMEM-budget twin of ``gather_distance``: the points block is
+    placed in ``TPUMemorySpace.ANY`` (HBM) and never copied wholesale;
+    per query row the C neighbor rows arrive in a double-buffered VMEM
+    scratch via per-row ``make_async_copy`` DMAs, overlapped with the
+    previous row's distance compute.  The point-side norms are gathered
+    OUTSIDE the kernel into a [Q, C] block (a gather has no arithmetic,
+    so it cannot move bits) and ride in as a regular VMEM input.
+
+    Bit-identical in interpret mode to ``kernels.ref.
+    gather_distance_hbm_ref`` — the oracle mirrors the kernel's reduction
+    shape (d padded to the lane width, elementwise-multiply + sum) so the
+    f32 accumulation order matches exactly.
+    """
+    nq, c = nbr_ids.shape
+    if nq == 0 or c == 0:
+        return jnp.full((nq, c), jnp.inf, jnp.float32)
+    # pre-gather the per-candidate norms (bit-free) before any padding
+    n2g = norms.astype(jnp.float32)[jnp.maximum(nbr_ids, 0)]       # [Q, C]
+    points = _pad(points, 1, LANE, 0)
+    queries = _pad(_pad(queries, 0, tq, 0), 1, LANE, 0)
+    nbr_ids = _pad(_pad(nbr_ids, 0, tq, -1), 1, LANE, -1)
+    n2g = _pad(_pad(n2g, 0, tq, 0.0), 1, LANE, 0.0)
+    qp, dp = queries.shape
+    cp = nbr_ids.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_gather_distance_hbm_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.float32),
+        grid=(qp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, dp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, cp, dp), points.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(queries, nbr_ids, n2g, points)
+    return out[:nq, :c]
+
+
+def _gather_distance_int8_hbm_kernel(q_ref, ids_ref, sg_ref, n2g_ref, qa_ref,
+                                     pts_hbm, o_ref, scratch, sem, *,
+                                     metric: str):
+    tq, cp = ids_ref.shape
+    # quantize the query tile once per grid step — row-local and
+    # order-independent, so the bits match the oracle's per-batch pass
+    q8, sq = _ref.quantize_symmetric(q_ref[...].astype(jnp.float32))
+
+    def compute_row(t, g):                       # g: [Cp, dp] int8 rows
+        ids = ids_ref[t, :]
+        # int8 x int8 -> int32 accumulation is EXACT (order-free), so the
+        # streamed per-row reduction cannot differ from the oracle einsum
+        ip = jnp.sum(g.astype(jnp.int32) * q8[t, :].astype(jnp.int32)[None, :],
+                     axis=-1)                    # [Cp] int32
+        ipf = ip.astype(jnp.float32) * (sq[t] * sg_ref[t, :])
+        qa = qa_ref[t, 0]
+        if metric == "mips":
+            d = -ipf
+        elif metric == "cosine":
+            d = 1.0 - ipf / jnp.maximum(qa * n2g_ref[t, :], 1e-30)
+        else:
+            d = jnp.maximum(qa + n2g_ref[t, :] - 2.0 * ipf, 0.0)
+        o_ref[pl.ds(t, 1), :] = jnp.where(ids >= 0, d, jnp.inf)[None]
+
+    _stream_rows(pts_hbm, ids_ref, scratch, sem, tq, cp, compute_row)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tq", "interpret"))
+def gather_distance_int8_hbm(
+    points: jax.Array,   # [n, d] int8 (quantize_symmetric packing) — in HBM
+    scales: jax.Array,   # [n] f32 per-point dequantization scales
+    norms: jax.Array,    # [n] f32 EXACT norms (computed pre-quantization)
+    queries: jax.Array,  # [Q, d] f32
+    q_norms: jax.Array,  # [Q] f32 query norm terms (metrics.point_norms)
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+    tq: int = _TQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """HBM-streaming quantized gather-distance block [Q, C] f32.
+
+    The int8-first streaming kernel (the DMA traffic is 1/4 of the f32
+    twin's per row): int8 points stay in HBM, neighbor rows stream into a
+    double-buffered int8 VMEM scratch, and the per-point scales + exact
+    norms are pre-gathered outside the kernel into [Q, C] f32 blocks.
+    Query quantization happens in-kernel per tile exactly as in
+    ``gather_distance_int8``.
+
+    Bit-identical in interpret mode to ``kernels.ref.
+    gather_distance_int8_ref`` — the SAME oracle as the VMEM-resident
+    int8 kernel, because the int32 inner-product accumulation is
+    order-free and every f32 op is elementwise in matching order, so the
+    streaming row-at-a-time schedule cannot move bits.
+    """
+    if points.dtype != jnp.int8:
+        raise TypeError("gather_distance_int8_hbm expects int8 points")
+    nq, c = nbr_ids.shape
+    if nq == 0 or c == 0:
+        return jnp.full((nq, c), jnp.inf, jnp.float32)
+    safe = jnp.maximum(nbr_ids, 0)
+    sg = scales.astype(jnp.float32)[safe]                          # [Q, C]
+    n2g = norms.astype(jnp.float32)[safe]                          # [Q, C]
+    points = _pad(points, 1, LANE, 0)
+    queries = _pad(_pad(queries.astype(jnp.float32), 0, tq, 0), 1, LANE, 0)
+    nbr_ids = _pad(_pad(nbr_ids, 0, tq, -1), 1, LANE, -1)
+    sg = _pad(_pad(sg, 0, tq, 0.0), 1, LANE, 0.0)
+    n2g = _pad(_pad(n2g, 0, tq, 0.0), 1, LANE, 0.0)
+    qa = _pad(q_norms.astype(jnp.float32), 0, tq, 0.0)[:, None]    # [Qp, 1]
+    qa = _pad(qa, 1, LANE, 0.0)
+    qp, dp = queries.shape
+    cp = nbr_ids.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_gather_distance_int8_hbm_kernel, metric=metric),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.float32),
+        grid=(qp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, dp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+            pl.BlockSpec((tq, qa.shape[1]), lambda r: (r, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((tq, cp), lambda r: (r, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, cp, dp), jnp.int8),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(queries, nbr_ids, sg, n2g, qa, points)
     return out[:nq, :c]

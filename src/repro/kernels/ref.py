@@ -209,6 +209,45 @@ def gather_distance_ref(
     return jnp.where(nbr_ids >= 0, d, jnp.inf)
 
 
+def gather_distance_hbm_ref(
+    points: jax.Array,   # [n, d] (f32 or downcast)
+    norms: jax.Array,    # [n] f32 metric-dependent norms (metrics.point_norms)
+    queries: jax.Array,  # [Q, d]
+    nbr_ids: jax.Array,  # [Q, C] int32, -1 = padding
+    *,
+    metric: str = "l2",
+) -> jax.Array:
+    """Bit-identity oracle for the HBM-streaming f32 kernel: [Q, C] f32.
+
+    Same SEMANTICS as ``gather_distance_ref`` (allclose-tested), but the
+    f32 arithmetic mirrors the streaming kernel's shapes exactly so the
+    match is bit-for-bit in interpret mode: ``d`` is zero-padded to the
+    lane width (the kernel's VMEM scratch rows) and the inner product is
+    the elementwise-multiply + last-axis ``jnp.sum`` the kernel performs
+    per gathered row — f32 sum reductions are only bit-stable when both
+    sides reduce the same padded extent in the same order.  The int8
+    streaming kernel needs no separate oracle: its accumulation is int32
+    (order-free) so ``gather_distance_int8_ref`` already matches it
+    bit-for-bit.
+    """
+    lane = 128
+    pad = (-queries.shape[1]) % lane
+    q32 = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pad)))
+    pts = jnp.pad(points, ((0, 0), (0, pad)))
+    safe = jnp.maximum(nbr_ids, 0)
+    g = pts[safe].astype(jnp.float32)                    # [Q, C, dp]
+    ip = jnp.sum(g * q32[:, None, :], axis=-1)
+    if metric == "mips":
+        d = -ip
+    elif metric == "cosine":
+        qn = jnp.sqrt(jnp.sum(q32 * q32, axis=-1))
+        d = 1.0 - ip / jnp.maximum(qn[:, None] * norms[safe], 1e-30)
+    else:
+        q2 = jnp.sum(q32 * q32, axis=-1)
+        d = jnp.maximum(q2[:, None] + norms[safe] - 2.0 * ip, 0.0)
+    return jnp.where(nbr_ids >= 0, d, jnp.inf)
+
+
 def sketch_hash_ref(
     x: jax.Array,           # [N, D] points
     hyperplanes: jax.Array,  # [M_BITS, D]

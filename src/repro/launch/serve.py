@@ -44,12 +44,15 @@ class Retriever:
     the corpus copy: "f32" (exact), "bf16" (half the footprint), or
     "int8" (scalar-quantized: int8 vectors + per-point f32 scales, ~1/4
     the points footprint, distances via the int8 MXU gather-distance
-    kernel with exact norm terms).
+    kernel with exact norm terms).  ``mesh`` (a single-axis
+    ``jax.sharding.Mesh``) serves through the sharded packing — one
+    partition-aligned corpus shard per device, per-query results merged
+    across shards (``distributed.serving.ShardedServingIndex``).
     """
 
     def __init__(self, corpus_emb: np.ndarray, index=None, *,
                  points_dtype: str = "f32", metric: str | None = None,
-                 build_params=None, seed: int = 0):
+                 build_params=None, seed: int = 0, mesh=None):
         """``metric`` defaults to the prebuilt ``index``'s (or explicit
         ``build_params``') own metric — serving ALWAYS uses the index's,
         so passing a disagreeing one is a loud error, not a silent
@@ -91,7 +94,8 @@ class Retriever:
         dtype = {"f32": None, "bf16": jnp.bfloat16, "int8": "int8"}[
             points_dtype]
         self.points_dtype = points_dtype
-        self.sv = ServingIndex.from_index(index, corpus_emb, dtype=dtype)
+        self.sv = ServingIndex.from_index(index, corpus_emb, dtype=dtype,
+                                          mesh=mesh)
 
     def retrieve(self, q_emb: np.ndarray, *, k: int = 2,
                  beam: int = 32) -> np.ndarray:

@@ -326,6 +326,144 @@ def test_gather_distance_int8_rejects_float_points():
                              ids, interpret=INTERP)
 
 
+# ------------------------------------- HBM-streaming gather-distance ---
+
+@pytest.mark.parametrize("n,d,q,c", GD_SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_hbm_matches_ref_bitexact(n, d, q, c, metric):
+    """The HBM-streaming kernel (points stay in HBM, neighbor rows DMA'd
+    into VMEM scratch) must agree with its shape-mirrored oracle
+    BIT-FOR-BIT: both sides reduce the same lane-padded extent in the
+    same elementwise order, and the norm halves are shared f32 data."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_hbm
+
+    rng = np.random.default_rng(hash((n, d, q, c, metric, 77)) % 2**31)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((q, d)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, n, (q, c)), dtype=jnp.int32)
+    norms = point_norms(x, metric)
+    got = gather_distance_hbm(x, norms, qs, ids, metric=metric,
+                              interpret=INTERP)
+    want = ref.gather_distance_hbm_ref(x, norms, qs, ids, metric=metric)
+    g = np.asarray(got)
+    assert (np.isinf(g) == (np.asarray(ids) < 0)).all()
+    np.testing.assert_array_equal(g, np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,q,c", GD_SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_hbm_close_to_vmem_kernel(n, d, q, c, metric):
+    """Streaming vs VMEM-resident kernel on the same inputs: different
+    reduction strategies, same distances to f32 tolerance — an oversized
+    shard can switch paths without a recall cliff."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import (gather_distance,
+                                               gather_distance_hbm)
+
+    rng = np.random.default_rng(hash((n, d, q, c, metric, 78)) % 2**31)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((q, d)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, n, (q, c)), dtype=jnp.int32)
+    norms = point_norms(x, metric)
+    a = np.asarray(gather_distance_hbm(x, norms, qs, ids, metric=metric,
+                                       interpret=INTERP))
+    b = np.asarray(gather_distance(x, norms, qs, ids, metric=metric,
+                                   interpret=INTERP))
+    mask = np.asarray(ids) >= 0
+    np.testing.assert_allclose(a[mask], b[mask], rtol=1e-5, atol=1e-5)
+
+
+def test_gather_distance_hbm_downcast_points():
+    """bf16 points stream bit-identically too: the scratch buffer keeps
+    the points dtype and both sides upcast row-wise in the same order."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_hbm
+
+    rng = np.random.default_rng(21)
+    x32 = jnp.asarray(rng.standard_normal((150, 24)), dtype=jnp.float32)
+    norms = point_norms(x32, "l2")       # BEFORE the downcast
+    x16 = x32.astype(jnp.bfloat16)
+    qs = jnp.asarray(rng.standard_normal((6, 24)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, 150, (6, 18)), dtype=jnp.int32)
+    got = gather_distance_hbm(x16, norms, qs, ids, metric="l2",
+                              interpret=INTERP)
+    want = ref.gather_distance_hbm_ref(x16, norms, qs, ids, metric="l2")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,q,c", GD_SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "mips", "cosine"])
+def test_gather_distance_int8_hbm_matches_ref_bitexact(n, d, q, c, metric):
+    """The int8 streaming kernel shares the VMEM kernel's oracle: the
+    int32 accumulation is order-free and every f32 op is elementwise in
+    matching order, so ``gather_distance_int8_ref`` is bit-exact for
+    BOTH kernels."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import gather_distance_int8_hbm
+
+    rng = np.random.default_rng(hash((n, d, q, c, metric, 79)) % 2**31)
+    x32, x8, scl = _quantized(rng, n, d)
+    qs = jnp.asarray(rng.standard_normal((q, d)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, n, (q, c)), dtype=jnp.int32)
+    norms = point_norms(x32, metric)          # EXACT, pre-quantization
+    qn = point_norms(qs, metric)
+    got = gather_distance_int8_hbm(x8, scl, norms, qs, qn, ids,
+                                   metric=metric, interpret=INTERP)
+    want = ref.gather_distance_int8_ref(x8, scl, norms, qs, qn, ids,
+                                        metric=metric)
+    g = np.asarray(got)
+    assert (np.isinf(g) == (np.asarray(ids) < 0)).all()
+    np.testing.assert_array_equal(g, np.asarray(want))
+
+
+def test_gather_distance_int8_hbm_rejects_float_points():
+    from repro.kernels.gather_distance import gather_distance_int8_hbm
+
+    x = jnp.zeros((16, 8), jnp.float32)
+    aux = jnp.zeros((16,), jnp.float32)
+    qs = jnp.zeros((2, 8), jnp.float32)
+    ids = jnp.zeros((2, 4), jnp.int32)
+    with pytest.raises(TypeError):
+        gather_distance_int8_hbm(x, aux, aux, qs,
+                                 jnp.zeros((2,), jnp.float32), ids,
+                                 interpret=INTERP)
+
+
+def test_gather_distance_hbm_beyond_vmem_budget():
+    """The whole point of the streaming path: a points block the VMEM
+    budget rejects still serves bit-exactly through the HBM kernel."""
+    from repro.core.metrics import point_norms
+    from repro.kernels.gather_distance import fits_vmem, gather_distance_hbm
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2048, 32)), dtype=jnp.float32)
+    budget = 64 * 1024                        # 256 KB block >> 64 KB budget
+    assert not fits_vmem(x, budget=budget)
+    qs = jnp.asarray(rng.standard_normal((4, 32)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, 2048, (4, 24)), dtype=jnp.int32)
+    norms = point_norms(x, "l2")
+    got = gather_distance_hbm(x, norms, qs, ids, metric="l2",
+                              interpret=INTERP)
+    want = ref.gather_distance_hbm_ref(x, norms, qs, ids, metric="l2")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vmem_points_budget_env_override(monkeypatch):
+    """`PIPNN_VMEM_POINTS_BUDGET` reconfigures the budget every
+    ``fits_vmem`` call reads; an explicit ``budget=`` beats the env."""
+    from repro.kernels.gather_distance import fits_vmem, vmem_points_budget
+
+    x = jnp.zeros((1000, 32), jnp.float32)    # 128 KB
+    assert fits_vmem(x)                       # default 8 MiB
+    monkeypatch.setenv("PIPNN_VMEM_POINTS_BUDGET", str(64 * 1024))
+    assert vmem_points_budget() == 64 * 1024
+    assert not fits_vmem(x)
+    assert fits_vmem(x, budget=1 << 23)       # explicit beats env
+    monkeypatch.delenv("PIPNN_VMEM_POINTS_BUDGET")
+    assert fits_vmem(x)
+
+
 # ----------------------------------------------- kernel-powered PiPNN build ---
 
 def test_full_build_with_flashknn_matches_jax_path():

@@ -218,9 +218,9 @@ def test_pipnn_search_caches_serving_index(built, monkeypatch):
     calls = {"n": 0}
     orig = ServingIndex.from_index.__func__
 
-    def counting(cls, index, xx, *, dtype=None):
+    def counting(cls, index, xx, *, dtype=None, **kw):
         calls["n"] += 1
-        return orig(cls, index, xx, dtype=dtype)
+        return orig(cls, index, xx, dtype=dtype, **kw)
 
     monkeypatch.setattr(ServingIndex, "from_index", classmethod(counting))
     idx._serving = None   # reset any cache from other tests
@@ -494,6 +494,88 @@ def test_serving_pallas_interpret_path_matches(built):
     a = sv.search(q, k=10, beam=24, use_pallas=False)
     b = sv.search(q, k=10, beam=24, use_pallas=True, interpret=True)
     np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- kernel-path selection ---
+
+def test_serving_kernel_path_auto_xla_on_cpu(built):
+    """On a CPU backend the auto-selection is the XLA gather, and the
+    served path is surfaced both on the index and in telemetry."""
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    assert sv.kernel_path == "xla"
+    _, stats = sv.search(x[:4], k=5, with_stats=True)
+    assert stats["kernel_path"] == "xla"
+    # the empty-batch short-circuit reports the path too
+    _, stats0 = sv.search(np.zeros((0, x.shape[1]), np.float32), k=5,
+                          with_stats=True)
+    assert stats0["kernel_path"] == "xla"
+
+
+@pytest.mark.parametrize("path", ["vmem", "hbm"])
+def test_serving_forced_kernel_path_matches_xla(built, path):
+    """Forcing either Pallas path (interpret mode) returns the same
+    neighbors as the XLA gather, and the stats record the forced path."""
+    idx, x = built
+    q = x[:24]
+    sv = ServingIndex.from_index(idx, x)
+    a = sv.search(q, k=10, beam=24, kernel_path="xla")
+    b, stats = sv.search(q, k=10, beam=24, kernel_path=path,
+                         interpret=True, with_stats=True)
+    np.testing.assert_array_equal(a, b)
+    assert stats["kernel_path"] == path
+
+
+def test_serving_int8_forced_hbm_matches_xla(built):
+    """int8 + streaming kernel end to end: bit-equal distances => the
+    same neighbors as the int8 XLA oracle path."""
+    idx, x = built
+    q = x[:24]
+    sv8 = ServingIndex.from_index(idx, x, dtype="int8")
+    a = sv8.search(q, k=10, beam=24, kernel_path="xla")
+    b = sv8.search(q, k=10, beam=24, kernel_path="hbm", interpret=True)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_serving_kernel_path_rejects_unknown(built):
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    with pytest.raises(ValueError):
+        sv.search(x[:2], k=5, kernel_path="dma")
+
+
+def test_resolve_kernel_path_use_pallas_and_budget():
+    """The legacy boolean still works: True -> vmem when the block fits
+    the (overridable) budget, hbm when it does not; False -> xla."""
+    from repro.core.beam_search import resolve_kernel_path
+
+    x = jnp.zeros((1000, 32), jnp.float32)          # 128 KB
+    assert resolve_kernel_path(x, use_pallas=False) == "xla"
+    assert resolve_kernel_path(x, use_pallas=True) == "vmem"
+    assert resolve_kernel_path(x, use_pallas=True,
+                               vmem_budget=64 * 1024) == "hbm"
+    # explicit kernel_path beats everything
+    assert resolve_kernel_path(x, kernel_path="hbm",
+                               use_pallas=False) == "hbm"
+
+
+def test_serving_vmem_budget_threads_to_selection(built):
+    """A ServingIndex-level budget reshapes the auto-selection the legacy
+    boolean maps through: under a tiny budget use_pallas=True serves the
+    streaming kernel and still returns the XLA path's neighbors."""
+    idx, x = built
+    q = x[:16]
+    tiny = ServingIndex.from_index(idx, x, vmem_budget=1024)
+    big = ServingIndex.from_index(idx, x)
+    a = big.search(q, k=10, beam=24, use_pallas=False)
+    b, stats = tiny.search(q, k=10, beam=24, use_pallas=True,
+                           interpret=True, with_stats=True)
+    assert stats["kernel_path"] == "hbm"
+    np.testing.assert_array_equal(a, b)
+    c, stats2 = big.search(q, k=10, beam=24, use_pallas=True,
+                           interpret=True, with_stats=True)
+    assert stats2["kernel_path"] == "vmem"
+    np.testing.assert_array_equal(a, c)
 
 
 # ------------------------------------------------------------ recall_at_k ---
