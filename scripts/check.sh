@@ -3,6 +3,10 @@
 #
 # Usage: scripts/check.sh            (from the repo root)
 #
+# 0. runs the static contract checker (python -m repro.analysis.lint):
+#    kernel VMEM/tiling/coverage/oracle contracts, jaxpr hot-path +
+#    donation + recompilation audits, AST jit hygiene — fail-fast with a
+#    per-finding file:line report before any test spins up
 # 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
 # 2. re-runs the partition-invariant + degenerate-data regression suite
 #    standalone (fast; it is also part of tier-1)
@@ -32,6 +36,21 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== static contract checker (repro.analysis.lint) =="
+# kernel VMEM/tiling/coverage/oracle contracts + jaxpr hot-path, donation
+# and recompilation audits + AST jit hygiene; findings print as
+# "file:line: RULE [symbol] message" (see README "Static analysis").
+# Fails fast BEFORE the test suite: a contract violation here would
+# otherwise surface as a slow test failure or a TPU-only OOM.
+if ! python -m repro.analysis.lint; then
+  echo ""
+  echo "lint FAILED: fix the findings above (rule catalog:"
+  echo "  python -m repro.analysis.lint --list-rules)."
+  echo "The baseline (src/repro/analysis/baseline.txt) stays empty —"
+  echo "baselining is only for genuinely unfixable findings."
+  exit 1
+fi
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q

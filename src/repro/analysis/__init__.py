@@ -1,0 +1,21 @@
+"""Static contract checking for the PiPNN jax_pallas codebase.
+
+Three passes, one CLI (``python -m repro.analysis.lint``), all gated in CI:
+
+  * ``contracts``   — kernel contract checker: captures every
+    ``pl.pallas_call`` site through a tracing spy, then verifies VMEM
+    footprint, TPU tile alignment, grid coverage and oracle pairing over
+    a swept shape grid (rules PIPK001-PIPK005).
+  * ``jaxpr_audit`` — jaxpr/HLO auditor over the serving and build hot
+    paths: no host callbacks, no f64, donation honored, bounded jit-cache
+    growth across a simulated serving session (rules PIPJ001-PIPJ004).
+  * ``ast_lint``    — syntactic lint over ``src/repro``: traced-value
+    Python branches inside jitted functions, host syncs in jit regions,
+    mutable default arguments, missing ``static_argnames`` on
+    shape-controlling params (rules PIPA001-PIPA004).
+
+Findings carry ``file:line`` plus a rule id; ``lint.py`` holds the shared
+``Finding`` type, the (empty) baseline mechanism and the CLI.  (No eager
+submodule imports here — ``python -m repro.analysis.lint`` must own the
+first execution of the module.)
+"""

@@ -1,0 +1,373 @@
+"""AST lint over ``src/repro`` — rules PIPA001-PIPA004.
+
+Purely syntactic: nothing here imports jax or executes repo code, so this
+pass is fast and safe to run on any checkout.  The rules target the
+jit-hygiene bugs that actually bite this codebase:
+
+  PIPA001  Python ``if``/``while`` on a traced value inside a jitted
+           function.  Traced values are the function's own parameters
+           minus ``static_argnames``/``static_argnums`` (closure
+           variables are trace-time constants and never flagged), plus
+           any local assigned from a traced expression.
+  PIPA002  host synchronization inside a jitted function: ``.item()`` /
+           ``.tolist()`` on a traced value, ``float()/int()/bool()`` of a
+           traced value, or ``np.*`` called on a traced value.
+  PIPA003  mutable default argument (list/dict/set literal or
+           constructor) — anywhere in the package.
+  PIPA004  a jitted function takes a known shape-controlling parameter
+           (``k``, ``beam``, ``bm`` …) that is not declared static, so
+           every distinct value silently recompiles.
+
+Shape/dtype introspection is never a traced use: attribute reads in
+``SAFE_ATTRS`` and calls to ``len``/``isinstance``/``hasattr``/
+``getattr``/``callable`` are excluded, as are ``is None`` tests on
+optional array arguments.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.lint import Finding
+
+# Attribute reads that are static under tracing (shape metadata).
+SAFE_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "itemsize",
+                        "sharding", "aval", "weak_type"})
+
+# Builtins whose result on a traced argument is static / not a sync.
+SAFE_CALLS = frozenset({"len", "isinstance", "hasattr", "getattr",
+                        "callable", "type", "id"})
+
+# Parameter names that control output shapes / unrolled trip counts in
+# this codebase.  A jitted function taking one of these non-statically
+# recompiles per value (or mis-traces) — PIPA004.
+SHAPE_PARAMS = frozenset({"k", "beam", "iters", "expansions", "bm", "bn",
+                          "tq", "l_max", "n_points", "max_deg", "chunk",
+                          "sub_chunk", "block", "query_chunk"})
+
+HOST_SYNC_METHODS = frozenset({"item", "tolist", "__array__"})
+HOST_CAST_FUNCS = frozenset({"float", "int", "bool", "complex"})
+NUMPY_NAMES = frozenset({"np", "numpy"})
+MUTABLE_CTORS = frozenset({"list", "dict", "set"})
+
+
+def _is_jit(node: ast.expr) -> bool:
+    """``jit`` / ``jax.jit`` (any attribute path ending in ``.jit``)."""
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    return False
+
+
+def _is_partial(node: ast.expr) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id == "partial"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "partial"
+    return False
+
+
+def _literal_names(node: ast.expr | None):
+    """Extract a static_argnames literal -> tuple of names, or None if the
+    value is not a recognizable literal (caller should then skip the
+    traced-param rules rather than guess)."""
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _literal_ints(node: ast.expr | None):
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+class _JitSite:
+    """A function known to be jitted, with its resolved static params.
+    ``known`` is False when static_argnames/nums were not literals — the
+    traced set is then unknown and rules 001/002/004 are skipped."""
+
+    def __init__(self, fn: ast.FunctionDef, statics, known: bool):
+        self.fn = fn
+        self.statics = frozenset(statics)
+        self.known = known
+
+
+def _statics_from_call_kwargs(keywords) -> tuple[frozenset, bool, tuple]:
+    names: set[str] = set()
+    nums: tuple = ()
+    known = True
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            lit = _literal_names(kw.value)
+            if lit is None:
+                known = False
+            else:
+                names.update(lit)
+        elif kw.arg == "static_argnums":
+            lit = _literal_ints(kw.value)
+            if lit is None:
+                known = False
+            else:
+                nums = lit
+    return frozenset(names), known, nums
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _positional_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+
+
+def _collect_jit_sites(tree: ast.Module) -> list[_JitSite]:
+    """Find jitted functions two ways: decorator form (``@jax.jit`` /
+    ``@functools.partial(jax.jit, ...)``) and call form
+    (``jax.jit(step, ...)`` naming a function defined in scope)."""
+    defs_by_name: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    sites: dict[int, _JitSite] = {}
+
+    def add(fn, statics, known, nums=()):
+        if nums:
+            pos = _positional_names(fn)
+            extra = {pos[i] for i in nums if 0 <= i < len(pos)}
+            statics = frozenset(statics) | extra
+        sites[id(fn)] = _JitSite(fn, statics, known)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jit(dec):
+                    add(node, frozenset(), True)
+                elif isinstance(dec, ast.Call):
+                    if _is_partial(dec.func) and dec.args and \
+                            _is_jit(dec.args[0]):
+                        names, known, nums = _statics_from_call_kwargs(
+                            dec.keywords)
+                        add(node, names, known, nums)
+                    elif _is_jit(dec.func):
+                        names, known, nums = _statics_from_call_kwargs(
+                            dec.keywords)
+                        add(node, names, known, nums)
+        elif isinstance(node, ast.Call) and _is_jit(node.func) and \
+                node.args and isinstance(node.args[0], ast.Name):
+            for fn in defs_by_name.get(node.args[0].id, ()):
+                names, known, nums = _statics_from_call_kwargs(node.keywords)
+                if id(fn) not in sites:
+                    add(fn, names, known, nums)
+    return list(sites.values())
+
+
+class _TracedUse(ast.NodeVisitor):
+    """Does this expression read a traced name in a value position?"""
+
+    def __init__(self, traced: frozenset):
+        self.traced = traced
+        self.hit = False
+
+    def visit_Name(self, node: ast.Name):
+        if node.id in self.traced:
+            self.hit = True
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in SAFE_ATTRS:
+            return  # shape metadata — static under tracing
+        self.visit(node.value)
+
+    def visit_Call(self, node: ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in SAFE_CALLS:
+            return
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare):
+        # `x is None` / `x is not None` on an optional arg is host logic.
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) and \
+                all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators):
+            return
+        self.generic_visit(node)
+
+
+def _uses_traced(node: ast.expr, traced: frozenset) -> bool:
+    v = _TracedUse(traced)
+    v.visit(node)
+    return v.hit
+
+
+def _lint_jit_body(site: _JitSite, path: str,
+                   findings: list[Finding]) -> None:
+    fn = site.fn
+    traced = {p for p in _param_names(fn)
+              if p not in site.statics and p != "self"}
+
+    # PIPA004 — shape-controlling param left non-static.
+    if site.known:
+        for p in sorted(traced & SHAPE_PARAMS):
+            findings.append(Finding(
+                "PIPA004", path, fn.lineno, fn.name,
+                f"parameter '{p}' controls shapes but is not in "
+                f"static_argnames — every distinct value recompiles"))
+
+    if not site.known:
+        return
+
+    traced = set(traced)
+
+    def scan(stmts, traced):
+        for stmt in stmts:
+            # forward-propagate tracedness through simple assignments
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                if value is not None:
+                    is_traced = _uses_traced(value, frozenset(traced))
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                if is_traced:
+                                    traced.add(n.id)
+                                else:
+                                    traced.discard(n.id)
+                continue
+            if isinstance(stmt, (ast.If, ast.While)):
+                if _uses_traced(stmt.test, frozenset(traced)):
+                    kind = "if" if isinstance(stmt, ast.If) else "while"
+                    findings.append(Finding(
+                        "PIPA001", path, stmt.lineno, fn.name,
+                        f"Python '{kind}' on a traced value — use "
+                        f"jnp.where/lax.cond/lax.while_loop"))
+                scan(stmt.body, traced)
+                scan(stmt.orelse, traced)
+                continue
+            if isinstance(stmt, (ast.For,)):
+                scan(stmt.body, traced)
+                scan(stmt.orelse, traced)
+                continue
+            if isinstance(stmt, (ast.With,)):
+                scan(stmt.body, traced)
+                continue
+            if isinstance(stmt, (ast.Try,)):
+                scan(stmt.body, traced)
+                for h in stmt.handlers:
+                    scan(h.body, traced)
+                scan(stmt.orelse, traced)
+                scan(stmt.finalbody, traced)
+                continue
+            if isinstance(stmt, ast.FunctionDef):
+                # nested def: inherits the enclosing traced set minus any
+                # name its own params shadow (the new binding's tracedness
+                # is unknown — stay quiet rather than guess).
+                inner = set(traced) - set(_param_names(stmt))
+                scan(stmt.body, inner)
+                continue
+
+    scan(fn.body, traced)
+
+    # PIPA002 — host syncs anywhere in the (possibly nested) body.  Uses
+    # the final propagated traced set; nested-def params excluded above
+    # don't matter here because the sync patterns name the value directly.
+    frozen = frozenset(traced)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in HOST_SYNC_METHODS \
+                and _uses_traced(f.value, frozen):
+            findings.append(Finding(
+                "PIPA002", path, node.lineno, fn.name,
+                f".{f.attr}() on a traced value forces a device->host "
+                f"sync inside jit"))
+        elif isinstance(f, ast.Name) and f.id in HOST_CAST_FUNCS and \
+                node.args and _uses_traced(node.args[0], frozen):
+            findings.append(Finding(
+                "PIPA002", path, node.lineno, fn.name,
+                f"{f.id}() of a traced value forces a device->host sync "
+                f"inside jit"))
+        elif isinstance(f, ast.Attribute) and \
+                isinstance(f.value, ast.Name) and \
+                f.value.id in NUMPY_NAMES and \
+                any(_uses_traced(a, frozen) for a in node.args):
+            findings.append(Finding(
+                "PIPA002", path, node.lineno, fn.name,
+                f"np.{f.attr}() on a traced value materializes it on "
+                f"host inside jit — use jnp.{f.attr}"))
+
+
+def _lint_mutable_defaults(tree: ast.Module, path: str,
+                           findings: list[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        defaults = list(node.args.defaults) + \
+            [d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                and d.func.id in MUTABLE_CTORS and not d.args
+                and not d.keywords)
+            if bad:
+                findings.append(Finding(
+                    "PIPA003", path, d.lineno, node.name,
+                    "mutable default argument — use None and create "
+                    "inside the function"))
+
+
+def lint_source(src: str, path: str) -> list[Finding]:
+    """Lint one module's source.  ``path`` is used verbatim in findings."""
+    findings: list[Finding] = []
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        findings.append(Finding(
+            "PIPA001", path, e.lineno or 0, "<module>",
+            f"syntax error prevents linting: {e.msg}"))
+        return findings
+    _lint_mutable_defaults(tree, path, findings)
+    for site in _collect_jit_sites(tree):
+        _lint_jit_body(site, path, findings)
+    return findings
+
+
+def lint_package(pkg: pathlib.Path,
+                 root: pathlib.Path | None = None) -> list[Finding]:
+    """Lint every ``.py`` under ``pkg``; paths in findings are relative to
+    ``root`` (defaults to ``pkg``'s parent)."""
+    pkg = pathlib.Path(pkg)
+    base = pathlib.Path(root) if root is not None else pkg.parent
+    findings: list[Finding] = []
+    for py in sorted(pkg.rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        rel = py.relative_to(base).as_posix()
+        findings += lint_source(py.read_text(), rel)
+    return findings

@@ -1,0 +1,449 @@
+"""Kernel contract checker — rules PIPK001-PIPK005.
+
+Rather than hand-maintaining a shadow copy of every kernel's BlockSpecs
+(which would drift), the checker *captures* them: ``pl.pallas_call`` is
+replaced with a recording spy while each registered kernel entry is
+abstractly evaluated (``jax.eval_shape`` of the entry's ``__wrapped__``,
+so the jit wrapper is bypassed and no compilation happens).  The spy sees
+the exact grid, in/out BlockSpecs, scratch shapes and call-time operand
+avals the real kernel would launch with — including all the padding the
+wrapper applied.
+
+Per captured launch, over a swept shape grid per kernel:
+
+  PIPK001  the VMEM working set (tile-padded block bytes, doubled for
+           grid-varying blocks to account for double buffering, plus VMEM
+           scratch) exceeds the per-core VMEM capacity.  Sweep shapes are
+           generated through the kernel's OWN admission predicate
+           (``fits_vmem`` under ``vmem_points_budget()``), so this rule
+           proves "admitted => fits" — the property serving relies on.
+  PIPK002  a BlockSpec's trailing-two block dims are neither multiples of
+           the dtype's minimum (sublane, lane) tile nor the full operand
+           extent.
+  PIPK003  grid x block x index_map fails to cover an operand's padded
+           extents (some elements never visited).
+  PIPK004  the registry entry's paired oracle does not resolve.
+  PIPK005  a ``pl.pallas_call`` site in the source tree is not covered by
+           the registry (AST census vs registry claims).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import importlib
+import itertools
+import pathlib
+from typing import Callable
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+from repro.kernels.tiling import LANE, padded_bytes, sublane
+
+# Per-core VMEM capacity the working set must fit in (v4/v5 cores carry
+# 16 MiB; the points-budget default of 8 MiB deliberately leaves the rest
+# as headroom for the other blocks — this rule checks the SUM anyway).
+VMEM_CAPACITY = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    """One captured ``pl.pallas_call`` launch."""
+    grid: tuple
+    out_shape: tuple            # ShapeDtypeStructs, flattened
+    in_specs: list
+    out_specs: tuple
+    scratch_shapes: tuple
+    arg_avals: tuple            # call-time operand (shape, dtype) pairs
+
+
+@dataclasses.dataclass
+class Case:
+    """One swept shape point: entry args as ShapeDtypeStructs + statics."""
+    label: str
+    args: tuple
+    kwargs: dict
+
+
+@dataclasses.dataclass
+class KernelSpec:
+    name: str                   # public entry symbol
+    module: str                 # e.g. "repro.kernels.gather_distance"
+    oracle: str                 # "module:symbol" of the paired reference
+    cases: Callable[[], list]   # () -> [Case, ...]
+
+    @property
+    def path(self) -> str:
+        return "src/" + self.module.replace(".", "/") + ".py"
+
+
+# ---------------------------------------------------------------------------
+# capture harness
+# ---------------------------------------------------------------------------
+
+def capture_pallas_calls(fn, *args, **kwargs) -> list[PallasCallRecord]:
+    """Abstractly evaluate ``fn(*args, **kwargs)`` (args may be
+    ShapeDtypeStructs) with ``pl.pallas_call`` replaced by a spy; returns
+    the recorded launches.  No kernel code runs and nothing compiles."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    records: list[PallasCallRecord] = []
+    real = pl.pallas_call
+
+    def spy(kernel, *, out_shape, grid=None, in_specs=None, out_specs=None,
+            scratch_shapes=(), **_ignored):
+        flat_out = jax.tree_util.tree_leaves(
+            out_shape, is_leaf=lambda x: hasattr(x, "shape"))
+        flat_outspecs = jax.tree_util.tree_leaves(
+            out_specs, is_leaf=lambda s: hasattr(s, "block_shape"))
+
+        def runner(*call_args):
+            records.append(PallasCallRecord(
+                grid=tuple(grid) if grid is not None else (),
+                out_shape=tuple(flat_out),
+                in_specs=list(in_specs) if in_specs is not None else [],
+                out_specs=tuple(flat_outspecs),
+                scratch_shapes=tuple(scratch_shapes),
+                arg_avals=tuple((tuple(a.shape), np.dtype(a.dtype))
+                                for a in call_args),
+            ))
+            outs = tuple(jnp.zeros(s.shape, s.dtype) for s in flat_out)
+            return outs if isinstance(out_shape, (tuple, list)) else outs[0]
+
+        return runner
+
+    pl.pallas_call = spy
+    try:
+        target = getattr(fn, "__wrapped__", fn)
+        import functools
+        jax.eval_shape(functools.partial(target, **kwargs), *args)
+    finally:
+        pl.pallas_call = real
+    return records
+
+
+# ---------------------------------------------------------------------------
+# per-record checks
+# ---------------------------------------------------------------------------
+
+def _grid_corners(grid: tuple):
+    if not grid:
+        return [()]
+    axes = [(0,) if g <= 1 else (0, g - 1) for g in grid]
+    return list(itertools.product(*axes))
+
+
+def _block_index(spec, corner):
+    """index_map output at a grid corner, or None for un-blocked specs."""
+    if getattr(spec, "block_shape", None) is None:
+        return None
+    imap = getattr(spec, "index_map", None)
+    if imap is None:
+        return tuple(0 for _ in spec.block_shape)
+    out = imap(*corner)
+    if not isinstance(out, tuple):
+        out = (out,)
+    return tuple(int(i) for i in out)
+
+
+def check_record(rec: PallasCallRecord, spec_: KernelSpec, label: str,
+                 capacity: int = VMEM_CAPACITY) -> list[Finding]:
+    findings: list[Finding] = []
+    corners = _grid_corners(rec.grid)
+
+    # pair every blocked spec with the aval it slices
+    out_avals = tuple((tuple(s.shape), np.dtype(s.dtype))
+                      for s in rec.out_shape)
+    pairs = list(zip(rec.in_specs, rec.arg_avals)) + \
+        list(zip(rec.out_specs, out_avals))
+
+    total = 0
+    for spec, (shape, dtype) in pairs:
+        block = getattr(spec, "block_shape", None)
+        if block is None:
+            continue  # ANY-memory-space operand: lives in HBM, free of VMEM
+        block = tuple(int(b) for b in block)
+
+        # --- PIPK002: trailing-two tile alignment --------------------------
+        if block:
+            lane_dim, lane_ext = block[-1], shape[-1]
+            if lane_dim % LANE and lane_dim != lane_ext:
+                findings.append(Finding(
+                    "PIPK002", spec_.path, 0, spec_.name,
+                    f"[{label}] block {block} on operand {shape} "
+                    f"{dtype.name}: lane dim {lane_dim} is neither a "
+                    f"multiple of {LANE} nor the full extent"))
+        if len(block) >= 2:
+            sl = sublane(dtype)
+            sub_dim, sub_ext = block[-2], shape[-2]
+            if sub_dim != 1 and sub_dim % sl and sub_dim != sub_ext:
+                findings.append(Finding(
+                    "PIPK002", spec_.path, 0, spec_.name,
+                    f"[{label}] block {block} on operand {shape} "
+                    f"{dtype.name}: sublane dim {sub_dim} is neither a "
+                    f"multiple of {sl} nor the full extent"))
+
+        # --- PIPK003: grid coverage ---------------------------------------
+        idxs = [_block_index(spec, c) for c in corners]
+        for d in range(len(block)):
+            max_end = max((i[d] + 1) * block[d] for i in idxs)
+            if max_end < shape[d]:
+                findings.append(Finding(
+                    "PIPK003", spec_.path, 0, spec_.name,
+                    f"[{label}] grid {rec.grid} x block {block} covers "
+                    f"only {max_end} of {shape[d]} along dim {d} of "
+                    f"operand {shape}"))
+                break
+
+        # --- VMEM accumulation (for PIPK001) ------------------------------
+        varies = len(set(idxs)) > 1
+        total += (2 if varies else 1) * padded_bytes(block, dtype)
+
+    for scratch in rec.scratch_shapes:
+        try:
+            dt = np.dtype(scratch.dtype)
+        except TypeError:
+            continue  # DMA semaphores etc. — not VMEM tiles
+        total += padded_bytes(tuple(int(s) for s in scratch.shape), dt)
+
+    if total > capacity:
+        findings.append(Finding(
+            "PIPK001", spec_.path, 0, spec_.name,
+            f"[{label}] VMEM working set {total / 2**20:.1f} MiB exceeds "
+            f"the {capacity / 2**20:.0f} MiB per-core capacity "
+            f"(tile-padded blocks x double-buffering + scratch)"))
+    return findings
+
+
+def _resolve(ref: str):
+    mod, _, name = ref.partition(":")
+    return getattr(importlib.import_module(mod), name)
+
+
+def check_kernel(spec: KernelSpec,
+                 capacity: int = VMEM_CAPACITY) -> list[Finding]:
+    findings: list[Finding] = []
+    try:
+        _resolve(spec.oracle)
+    except (ImportError, AttributeError):
+        findings.append(Finding(
+            "PIPK004", spec.path, 0, spec.name,
+            f"declared oracle '{spec.oracle}' does not resolve — every "
+            f"kernel needs a pure reference twin"))
+    entry = _resolve(f"{spec.module}:{spec.name}")
+    for case in spec.cases():
+        records = capture_pallas_calls(entry, *case.args, **case.kwargs)
+        if not records:
+            findings.append(Finding(
+                "PIPK005", spec.path, 0, spec.name,
+                f"[{case.label}] entry ran without launching any "
+                f"pallas_call — registry entry is stale"))
+        for rec in records:
+            findings += check_record(rec, spec, case.label, capacity)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the registry + shape sweeps
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    import jax
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _max_admitted_n(d: int, dtype, with_scales: bool) -> int:
+    """Largest point count the kernel's own admission predicate accepts
+    for dimensionality ``d`` — binary search over ``fits_vmem`` exactly as
+    ``resolve_kernel_path`` calls it."""
+    import jax.numpy as jnp
+    from repro.kernels.gather_distance import fits_vmem
+
+    def fits(n):
+        pts = _sds((n, d), dtype)
+        extras = (_sds((n,), jnp.float32),) if with_scales else ()
+        return fits_vmem(pts, *extras)
+
+    lo, hi = 1, 1
+    while fits(hi):
+        hi *= 2
+        if hi > 1 << 28:
+            break
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        lo, hi = (mid, hi) if fits(mid) else (lo, mid)
+    return lo
+
+
+def _gather_cases(int8: bool) -> list:
+    import jax.numpy as jnp
+    f32, i32 = jnp.float32, jnp.int32
+    pdt = jnp.int8 if int8 else f32
+    cases = []
+    for d in (8, 32, 128, 512):
+        n = _max_admitted_n(d, pdt, with_scales=int8)
+        for nq, c in ((7, 100), (64, 512)):
+            label = f"n={n} d={d} Q={nq} C={c}"
+            if int8:
+                args = (_sds((n, d), pdt), _sds((n,), f32), _sds((n,), f32),
+                        _sds((nq, d), f32), _sds((nq,), f32),
+                        _sds((nq, c), i32))
+            else:
+                args = (_sds((n, d), pdt), _sds((n,), f32),
+                        _sds((nq, d), f32), _sds((nq, c), i32))
+            cases.append(Case(label, args, {"metric": "l2"}))
+    return cases
+
+
+def _gather_hbm_cases(int8: bool) -> list:
+    """HBM-streaming sweep: points size is irrelevant (ANY memory space);
+    what matters is the double-buffered row scratch at the serving
+    envelope — C = expansions x beam <= 512 candidates, d <= 2048."""
+    import jax.numpy as jnp
+    f32, i32 = jnp.float32, jnp.int32
+    pdt = jnp.int8 if int8 else f32
+    n = 1 << 20
+    cases = []
+    for d in (128, 2048):
+        for nq, c in ((7, 128), (64, 512)):
+            label = f"n={n} d={d} Q={nq} C={c}"
+            if int8:
+                args = (_sds((n, d), pdt), _sds((n,), f32), _sds((n,), f32),
+                        _sds((nq, d), f32), _sds((nq,), f32),
+                        _sds((nq, c), i32))
+            else:
+                args = (_sds((n, d), pdt), _sds((n,), f32),
+                        _sds((nq, d), f32), _sds((nq, c), i32))
+            cases.append(Case(label, args, {"metric": "l2"}))
+    return cases
+
+
+def _merge_cases() -> list:
+    import jax.numpy as jnp
+    cases = []
+    for n, l in ((5, 32), (1000, 64), (64, 128)):
+        ids = _sds((n, l), jnp.int32)
+        ds = _sds((n, l), jnp.float32)
+        cases.append(Case(f"n={n} l={l}",
+                          (ids, ids, ds, ids, ids, ds), {}))
+    return cases
+
+
+def _edge_hash_cases() -> list:
+    import jax.numpy as jnp
+    return [Case(f"E={e} m={m}",
+                 (_sds((e, m), jnp.float32), _sds((e, m), jnp.float32)), {})
+            for e, m in ((100, 8), (4096, 16))]
+
+
+def _leaf_cases() -> list:
+    import jax.numpy as jnp
+    return [Case(f"B={b} C={c} D={d} k={k}",
+                 (_sds((b, c, d), jnp.float32), _sds((b, c), jnp.bool_)),
+                 {"k": k})
+            for b, c, d, k in ((1, 200, 32, 16), (4, 1024, 128, 32))]
+
+
+def _topk_cases() -> list:
+    import jax.numpy as jnp
+    return [Case(f"B={b} M={m} N={n} k={k}",
+                 (_sds((b, m, n), jnp.float32),), {"k": k})
+            for b, m, n, k in ((2, 100, 500, 16), (2, 512, 2048, 64))]
+
+
+def _pairwise_cases(int8: bool) -> list:
+    import jax.numpy as jnp
+    dt = jnp.int8 if int8 else jnp.float32
+    kw = {} if int8 else {"metric": "l2"}
+    return [Case(f"B={b} M={m} N={n} D={d}",
+                 (_sds((b, m, d), dt), _sds((b, n, d), dt)), dict(kw))
+            for b, m, n, d in ((2, 100, 300, 32), (2, 512, 512, 128))]
+
+
+REGISTRY: tuple[KernelSpec, ...] = (
+    KernelSpec("gather_distance", "repro.kernels.gather_distance",
+               "repro.kernels.ref:gather_distance_ref",
+               lambda: _gather_cases(int8=False)),
+    KernelSpec("gather_distance_int8", "repro.kernels.gather_distance",
+               "repro.kernels.ref:gather_distance_int8_ref",
+               lambda: _gather_cases(int8=True)),
+    KernelSpec("gather_distance_hbm", "repro.kernels.gather_distance",
+               "repro.kernels.ref:gather_distance_hbm_ref",
+               lambda: _gather_hbm_cases(int8=False)),
+    KernelSpec("gather_distance_int8_hbm", "repro.kernels.gather_distance",
+               "repro.kernels.ref:gather_distance_int8_ref",
+               lambda: _gather_hbm_cases(int8=True)),
+    KernelSpec("merge_sorted_reservoirs", "repro.kernels.segmented_merge",
+               "repro.kernels.ref:merge_sorted_reservoirs_ref",
+               _merge_cases),
+    KernelSpec("edge_hashes", "repro.kernels.edge_hash",
+               "repro.kernels.ref:edge_hashes_ref",
+               _edge_hash_cases),
+    KernelSpec("leaf_topk", "repro.kernels.leaf_knn",
+               "repro.kernels.ref:leaf_topk_ref",
+               _leaf_cases),
+    KernelSpec("rowwise_topk", "repro.kernels.topk",
+               "repro.kernels.ref:rowwise_topk_ref",
+               _topk_cases),
+    KernelSpec("pairwise_distance", "repro.kernels.distance",
+               "repro.kernels.ref:pairwise_distance_ref",
+               lambda: _pairwise_cases(int8=False)),
+    KernelSpec("pairwise_distance_int8", "repro.kernels.distance",
+               "repro.kernels.ref:pairwise_distance_int8_ref",
+               lambda: _pairwise_cases(int8=True)),
+)
+
+
+# ---------------------------------------------------------------------------
+# PIPK005: AST census of pallas_call sites vs registry claims
+# ---------------------------------------------------------------------------
+
+def _pallas_sites(py: pathlib.Path) -> list[int]:
+    tree = ast.parse(py.read_text(), filename=str(py))
+    lines = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else \
+                (f.id if isinstance(f, ast.Name) else None)
+            if name == "pallas_call":
+                lines.append(node.lineno)
+    return lines
+
+
+def check_site_census(root: pathlib.Path,
+                      registry=REGISTRY) -> list[Finding]:
+    findings: list[Finding] = []
+    claims: dict[str, int] = {}
+    for spec in registry:
+        claims[spec.path] = claims.get(spec.path, 0) + 1
+    for py in sorted((root / "src" / "repro").rglob("*.py")):
+        if "__pycache__" in py.parts or py.name.startswith("test"):
+            continue
+        rel = py.relative_to(root).as_posix()
+        sites = _pallas_sites(py)
+        if not sites:
+            continue
+        claimed = claims.get(rel, 0)
+        if len(sites) > claimed:
+            for ln in sites[claimed:] if claimed else sites:
+                findings.append(Finding(
+                    "PIPK005", rel, ln, py.stem,
+                    f"pallas_call site not covered by the kernel contract "
+                    f"registry ({claimed} registered for this file, "
+                    f"{len(sites)} sites found)"))
+    return findings
+
+
+def check_kernel_contracts(root: pathlib.Path | None = None,
+                           registry=REGISTRY,
+                           capacity: int = VMEM_CAPACITY) -> list[Finding]:
+    from repro.analysis.lint import repo_root
+    root = pathlib.Path(root) if root is not None else repo_root()
+    findings: list[Finding] = []
+    for spec in registry:
+        findings += check_kernel(spec, capacity)
+    findings += check_site_census(root, registry)
+    return findings

@@ -1,0 +1,256 @@
+"""Jaxpr/HLO auditor over the serving and build hot paths — PIPJ001-PIPJ004.
+
+The audited entry points are the programs that run per-query or per-chunk
+in production:
+
+  * ``core.beam_search._beam_search_multi`` — the serving engine (both the
+    pure-XLA and the VMEM-resident Pallas distance path);
+  * the streaming build step (``core.pipnn._make_stream_step``);
+  * the reservoir folds (``core.hashprune._merge_segmented_jit`` /
+    ``_merge_flat_jit``);
+  * ``distributed.serving.cross_shard_topk``.
+
+Checks:
+
+  PIPJ001  no host-callback primitive anywhere in the traced jaxpr — a
+           callback in a hot path serializes every dispatch on the host.
+  PIPJ002  no float64/complex128 value — a stray f64 (e.g. from an
+           un-annotated numpy scalar under x64) doubles bandwidth and
+           falls off the TPU fast path.
+  PIPJ003  buffer donation declared on an entry point must survive
+           lowering: each donated argument needs an aliased output in the
+           compiled module (``tf.aliasing_output``), otherwise XLA
+           silently dropped it and peak memory doubles.
+  PIPJ004  a simulated serving session (sweeping nq / beam / expansions /
+           serving dtype through ``ServingIndex.search``) must compile at
+           most one engine variant per static combination — distinct
+           *batch sizes* must all reuse the padded ``query_chunk`` shape.
+
+Tracing only (``jax.make_jaxpr`` / AOT ``.lower()``) for the first three —
+nothing executes; the recompilation audit actually runs a tiny index
+session, since compile-cache growth is a runtime property.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+HOST_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call",
+})
+
+_WIDE_DTYPES = ("float64", "complex128")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr traversal
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    """Every eqn in ``jaxpr`` and all nested jaxprs (pjit/scan/while/...)."""
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        j = getattr(j, "jaxpr", j)      # ClosedJaxpr -> Jaxpr
+        for eqn in j.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                for item in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                        stack.append(item)
+
+
+def audit_jaxpr(jaxpr, path: str, symbol: str) -> list[Finding]:
+    """PIPJ001 + PIPJ002 over one (closed) jaxpr."""
+    findings: list[Finding] = []
+    seen: set[str] = set()
+    for eqn in _iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if prim in HOST_CALLBACK_PRIMS and ("cb", prim) not in seen:
+            seen.add(("cb", prim))
+            findings.append(Finding(
+                "PIPJ001", path, 0, symbol,
+                f"host callback '{prim}' in the traced hot path — every "
+                f"dispatch round-trips through Python"))
+        for var in tuple(eqn.invars) + tuple(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            dt = str(getattr(aval, "dtype", ""))
+            if dt in _WIDE_DTYPES and ("wide", dt) not in seen:
+                seen.add(("wide", dt))
+                findings.append(Finding(
+                    "PIPJ002", path, 0, symbol,
+                    f"{dt} value (op '{prim}') in the traced hot path — "
+                    f"double-width types fall off the TPU fast path"))
+    return findings
+
+
+def trace_and_audit(fn, args, path: str, symbol: str,
+                    statics: dict | None = None) -> list[Finding]:
+    """``jax.make_jaxpr`` the function (bypassing any jit wrapper via
+    ``__wrapped__`` so static kwargs stay plain Python) and audit it."""
+    import jax
+
+    target = getattr(fn, "__wrapped__", fn)
+    if statics:
+        target = functools.partial(target, **statics)
+    jaxpr = jax.make_jaxpr(target)(*args)
+    return audit_jaxpr(jaxpr, path, symbol)
+
+
+# ---------------------------------------------------------------------------
+# PIPJ003: donation survives lowering
+# ---------------------------------------------------------------------------
+
+def check_donation(jitted, args, n_donated: int, path: str, symbol: str,
+                   statics: dict | None = None) -> list[Finding]:
+    """Lower the (already-jitted) entry and require at least ``n_donated``
+    aliased outputs in the compiler input — the marker XLA strips when a
+    donated buffer has no same-shape/dtype output to reuse."""
+    lowered = jitted.lower(*args, **(statics or {}))
+    aliased = lowered.as_text().count("tf.aliasing_output")
+    if aliased < n_donated:
+        return [Finding(
+            "PIPJ003", path, 0, symbol,
+            f"{n_donated} argument(s) donated but only {aliased} aliased "
+            f"output(s) survive lowering — XLA dropped the donation and "
+            f"the buffers are double-allocated")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# entry-point registry
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    import jax
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def audit_hot_paths() -> list[Finding]:
+    import jax.numpy as jnp
+
+    f32, i32 = jnp.float32, jnp.int32
+    findings: list[Finding] = []
+
+    # serving engine — both the XLA and VMEM-resident distance paths
+    from repro.core import beam_search as bs
+    n, d, nq = 64, 16, 4
+    eng_args = (_sds((n, 8), i32), _sds((n, d), f32), _sds((n,), f32),
+                _sds((nq, d), f32), _sds((), i32), None)
+    for kp in ("xla", "vmem"):
+        findings += trace_and_audit(
+            bs._beam_search_multi, eng_args,
+            "src/repro/core/beam_search.py", f"_beam_search_multi[{kp}]",
+            statics=dict(beam=8, iters=12, metric="l2", expansions=2,
+                         early_exit=True, kernel_path=kp, interpret=False))
+
+    # streaming build step (fused leaf-kNN -> emit -> hash -> fold)
+    from repro.core.pipnn import _make_stream_step
+    step = _make_stream_step(None, 4, "l2", "bidirected", False, True,
+                             2, 1.2, 64, "segmented", False)
+    l_max, m, s, c = 8, 8, 4, 16
+    step_args = (_sds((n, l_max), i32), _sds((n, l_max), i32),
+                 _sds((n, l_max), f32), _sds((n, d), f32),
+                 _sds((n, m), f32), _sds((s, c), i32))
+    findings += trace_and_audit(step, step_args,
+                                "src/repro/core/pipnn.py", "stream_step")
+    findings += check_donation(step, step_args, 3,
+                               "src/repro/core/pipnn.py", "stream_step")
+
+    # reservoir folds
+    from repro.core import hashprune as hp
+    e = 64
+    merge_args = (_sds((n, l_max), i32), _sds((n, l_max), i32),
+                  _sds((n, l_max), f32), _sds((e,), i32), _sds((e,), i32),
+                  _sds((e,), i32), _sds((e,), f32))
+    findings += trace_and_audit(
+        hp._merge_segmented_jit, merge_args,
+        "src/repro/core/hashprune.py", "_merge_segmented_jit",
+        statics=dict(use_pallas=False, interpret=False))
+    findings += check_donation(
+        hp._merge_segmented_jit, merge_args, 3,
+        "src/repro/core/hashprune.py", "_merge_segmented_jit",
+        statics=dict(use_pallas=False, interpret=False))
+    findings += check_donation(
+        hp._merge_flat_jit, merge_args, 3,
+        "src/repro/core/hashprune.py", "_merge_flat_jit")
+
+    # cross-shard top-k merge
+    from repro.distributed import serving as dserv
+    topk_args = (_sds((2, nq, 8), i32), _sds((2, nq, 8), f32))
+    findings += trace_and_audit(
+        dserv.cross_shard_topk, topk_args,
+        "src/repro/distributed/serving.py", "cross_shard_topk",
+        statics=dict(k=10))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PIPJ004: bounded jit-cache growth across a serving session
+# ---------------------------------------------------------------------------
+
+def _cache_size(jitted) -> int:
+    for attr in ("_cache_size", "cache_size"):
+        f = getattr(jitted, attr, None)
+        if callable(f):
+            return int(f())
+    return -1
+
+
+def _clear_cache(jitted) -> None:
+    for attr in ("clear_cache", "_clear_cache"):
+        f = getattr(jitted, attr, None)
+        if callable(f):
+            f()
+            return
+
+
+def audit_recompilation(query_chunk: int | None = 4) -> list[Finding]:
+    """Replay a serving session over a tiny index: every (beam, expansions,
+    serving dtype) combination is a legitimate engine variant; batch size
+    is NOT — ``query_chunk`` pads every dispatch to one shape.  Bound:
+    exactly |beams| x |expansions| x |dtypes| compiled variants.
+
+    ``query_chunk`` exists so the test suite can prove the rule has teeth:
+    passing ``None`` disables chunk padding, batch size leaks into the
+    dispatch shape, and the audit must report PIPJ004."""
+    from repro.core import beam_search as bs
+    from repro.core.serving import ServingIndex
+
+    eng = bs._beam_search_multi
+    before = _cache_size(eng)
+    if before < 0:
+        return []  # cache introspection unavailable on this jax version
+    _clear_cache(eng)
+
+    rng = np.random.default_rng(0)
+    n, d = 96, 16
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    graph = rng.integers(0, n, size=(n, 4)).astype(np.int32)
+    beams, expansions_sweep, batch_sizes = (4, 8), (1, 2), (1, 3, 7, 12)
+    indexes = (ServingIndex.from_graph(graph, x, 0),
+               ServingIndex.from_graph(graph, x, 0, dtype="int8"))
+    for sv in indexes:
+        for beam in beams:
+            for e in expansions_sweep:
+                for nq in batch_sizes:
+                    q = rng.normal(size=(nq, d)).astype(np.float32)
+                    sv.search(q, k=4, beam=beam, expansions=e,
+                              query_chunk=query_chunk)
+    bound = len(indexes) * len(beams) * len(expansions_sweep)
+    got = _cache_size(eng)
+    if got > bound:
+        return [Finding(
+            "PIPJ004", "src/repro/core/serving.py", 0, "ServingIndex.search",
+            f"serving session compiled {got} engine variants, bound is "
+            f"{bound} (|dtypes| x |beams| x |expansions|) — batch size is "
+            f"leaking into the dispatch shape despite query_chunk")]
+    return []
+
+
+def audit_all() -> list[Finding]:
+    return audit_hot_paths() + audit_recompilation()

@@ -1,0 +1,174 @@
+"""``python -m repro.analysis.lint`` — the static contract checker CLI.
+
+Runs the three analysis passes (AST lint, kernel contracts, jaxpr audit)
+and reports findings as ``file:line: RULE [symbol] message``.  Exit code
+is 0 iff every finding is covered by the baseline file — which is checked
+in EMPTY and expected to stay that way: pre-existing violations get fixed,
+not baselined; the file exists so a genuinely unfixable finding (e.g. a
+vendored snippet) has an explicit, reviewed escape hatch.
+
+Baseline format: one ``RULE path:symbol`` per line (no line numbers, so
+unrelated edits cannot invalidate entries), ``#`` comments allowed.
+
+Usage:
+    python -m repro.analysis.lint                 # full run, repo root
+    python -m repro.analysis.lint --pass ast      # one pass only
+    python -m repro.analysis.lint --list-rules    # rule catalog
+    python -m repro.analysis.lint --json          # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+RULES: dict[str, str] = {
+    # kernel contract checker (repro.analysis.contracts)
+    "PIPK001": "kernel VMEM footprint exceeds the per-core budget at an "
+               "admitted swept shape",
+    "PIPK002": "BlockSpec tile misaligned to the dtype's minimum TPU "
+               "(sublane, lane) tile",
+    "PIPK003": "grid x block does not cover the padded operand extents",
+    "PIPK004": "kernel has no resolvable paired oracle in kernels/ref.py "
+               "(or its declared oracle module)",
+    "PIPK005": "pallas_call site not covered by the kernel contract "
+               "registry",
+    # jaxpr/HLO auditor (repro.analysis.jaxpr_audit)
+    "PIPJ001": "host callback primitive inside a device hot path",
+    "PIPJ002": "f64/complex128 value inside a device hot path",
+    "PIPJ003": "donated buffer not aliased in the lowered output "
+               "(donation silently dropped)",
+    "PIPJ004": "simulated serving session compiled more jit variants than "
+               "the declared bound",
+    # AST lint (repro.analysis.ast_lint)
+    "PIPA001": "Python if/while on a traced value inside a jitted "
+               "function",
+    "PIPA002": "host synchronization (.item()/float()/np.*) inside a "
+               "jitted function",
+    "PIPA003": "mutable default argument",
+    "PIPA004": "shape-controlling parameter of a jitted function missing "
+               "from static_argnames",
+}
+
+PASSES = ("ast", "kernels", "jaxpr")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str       # e.g. "PIPK001"
+    path: str       # repo-relative file
+    line: int       # 1-indexed; 0 when the finding is not line-anchored
+    symbol: str     # function / kernel the finding anchors to
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline key — deliberately line-number-free so unrelated edits
+        above a baselined site cannot un-baseline it."""
+        return f"{self.rule} {self.path}:{self.symbol}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.symbol}] " \
+               f"{self.message}"
+
+
+def repo_root() -> pathlib.Path:
+    """The repository root (three levels above this file: src/repro/analysis)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def default_baseline_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent / "baseline.txt"
+
+
+def load_baseline(path: pathlib.Path) -> set[str]:
+    if not path.exists():
+        return set()
+    keys = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            keys.add(line)
+    return keys
+
+
+def run_all(root: pathlib.Path | None = None,
+            passes: tuple[str, ...] = PASSES) -> list[Finding]:
+    """Run the requested passes over the repo; returns raw findings
+    (baseline not applied)."""
+    root = pathlib.Path(root) if root is not None else repo_root()
+    findings: list[Finding] = []
+    if "ast" in passes:
+        from repro.analysis import ast_lint
+
+        findings += ast_lint.lint_package(root / "src" / "repro", root=root)
+    if "kernels" in passes:
+        from repro.analysis import contracts
+
+        findings += contracts.check_kernel_contracts(root=root)
+    if "jaxpr" in passes:
+        from repro.analysis import jaxpr_audit
+
+        findings += jaxpr_audit.audit_all()
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="PiPNN static contract checker (kernel contracts, "
+                    "jaxpr audit, AST lint)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASSES, default=None,
+                    help="run only this pass (repeatable; default: all)")
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=default_baseline_path(),
+                    help="baseline file (default: the checked-in, empty "
+                         "src/repro/analysis/baseline.txt)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file "
+                         "instead of failing (escape hatch — fix instead "
+                         "whenever possible)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    passes = tuple(args.passes) if args.passes else PASSES
+    findings = run_all(passes=passes)
+
+    if args.write_baseline:
+        lines = ["# repro.analysis.lint baseline — one 'RULE path:symbol'",
+                 "# per line.  Keep this EMPTY: fix findings instead of",
+                 "# baselining them whenever possible."]
+        lines += sorted({f.key for f in findings})
+        args.baseline.write_text("\n".join(lines) + "\n")
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    fresh = [f for f in findings if f.key not in baseline]
+    suppressed = len(findings) - len(fresh)
+
+    if args.json:
+        print(json.dumps([dataclasses.asdict(f) for f in fresh], indent=2))
+    else:
+        for f in sorted(fresh, key=lambda f: (f.path, f.line, f.rule)):
+            print(f.render())
+        tail = f" ({suppressed} baselined)" if suppressed else ""
+        status = "FAIL" if fresh else "OK"
+        print(f"repro.analysis.lint: {status} — {len(fresh)} finding(s) "
+              f"across passes [{', '.join(passes)}]{tail}")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -248,7 +248,10 @@ class ServingIndex:
                     "kernel_path": path,
                 }
             return out
-        chunk = nq if not query_chunk else min(int(query_chunk), nq)
+        # fixed chunk even when nq < query_chunk: small batches pad UP so
+        # every dispatch shares one [chunk, d] dispatch shape — otherwise
+        # each distinct small nq compiles its own engine variant
+        chunk = int(query_chunk) if query_chunk else nq
         ids_parts, hops_parts, comps_parts = [], [], []
         for s in range(0, nq, chunk):
             qc = q[s : s + chunk]

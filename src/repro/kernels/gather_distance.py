@@ -44,6 +44,7 @@ default globally.
 from __future__ import annotations
 
 import functools
+import logging
 import os
 
 import jax
@@ -52,8 +53,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref as _ref
+from repro.kernels.tiling import LANE, padded_bytes
 
-LANE = 128
+logger = logging.getLogger(__name__)
 _TQ = 8  # query rows per grid step (f32 sublane tile)
 _SUBLANE_I8 = 32  # int8 sublane tile: the packed points block pads rows to 32
 
@@ -66,9 +68,29 @@ def vmem_points_budget() -> int:
     """The effective VMEM points budget in bytes: the
     ``PIPNN_VMEM_POINTS_BUDGET`` environment variable when set, else the
     8 MiB default.  Read per call so tests (and deployments sizing for a
-    different accelerator generation) can adjust it without reimports."""
+    different accelerator generation) can adjust it without reimports.
+
+    A malformed or negative override is IGNORED with a warning (a serving
+    process must not crash at dispatch time over an env typo); ``0`` is a
+    valid budget meaning "nothing fits" — it forces the HBM-streaming
+    path wherever Pallas is requested."""
     env = os.environ.get("PIPNN_VMEM_POINTS_BUDGET", "")
-    return int(env) if env else _VMEM_POINTS_BUDGET
+    if not env:
+        return _VMEM_POINTS_BUDGET
+    try:
+        value = int(env)
+    except ValueError:
+        logger.warning(
+            "ignoring malformed PIPNN_VMEM_POINTS_BUDGET=%r "
+            "(not an int); using the %d-byte default",
+            env, _VMEM_POINTS_BUDGET)
+        return _VMEM_POINTS_BUDGET
+    if value < 0:
+        logger.warning(
+            "ignoring negative PIPNN_VMEM_POINTS_BUDGET=%d; "
+            "using the %d-byte default", value, _VMEM_POINTS_BUDGET)
+        return _VMEM_POINTS_BUDGET
+    return value
 
 
 def fits_vmem(points: jax.Array, *extras: jax.Array,
@@ -78,10 +100,19 @@ def fits_vmem(points: jax.Array, *extras: jax.Array,
     budget (``None``: ``vmem_points_budget()``).  The check is
     itemsize-aware, so an int8 serving copy gets 4x the f32 headroom: a
     shard that needed HBM streaming at f32 may serve fully VMEM-resident
-    once scalar-quantized."""
+    once scalar-quantized.
+
+    Bytes are priced at the TPU-tile-padded footprint
+    (``tiling.padded_bytes``): the kernels lane-pad d to 128 and
+    sublane-pad n to the dtype tile before ``pallas_call``, so a narrow-d
+    block occupies far more VMEM than ``size * itemsize`` suggests — a
+    [262144, 8] f32 block is 8 MiB of payload but 128 MiB once lane-padded.
+    Pricing the unpadded size here would admit shards that cannot compile
+    on real hardware (the static contract checker in ``repro.analysis``
+    verifies this predicate against total VMEM for exactly that reason)."""
     if budget is None:
         budget = vmem_points_budget()
-    total = sum(int(a.size) * a.dtype.itemsize for a in (points,) + extras)
+    total = sum(padded_bytes(a.shape, a.dtype) for a in (points,) + extras)
     return total <= int(budget)
 
 

@@ -257,3 +257,53 @@ def sketch_hash_ref(
     (Bit packing happens per-edge; the kernel fuses the GEMM + padding.)
     """
     return (x.astype(jnp.float32) @ hyperplanes.astype(jnp.float32).T)
+
+
+def edge_hashes_ref(src_sketch: jax.Array, dst_sketch: jax.Array) -> jax.Array:
+    """Packed residual hashes [E] int32 — oracle for ``edge_hashes``.
+
+    Eq. 1: the concatenated sign bits of Sketch(dst) - Sketch(src),
+    weighted by powers of two (bit i of the hash is sketch column i).
+    """
+    bits = ((dst_sketch - src_sketch) >= 0.0).astype(jnp.int32)
+    m = bits.shape[-1]
+    weights = 2 ** jnp.arange(m, dtype=jnp.int32)
+    return jnp.sum(bits * weights, axis=-1)
+
+
+def merge_sorted_reservoirs_ref(
+    a_ids: jax.Array, a_hashes: jax.Array, a_dists: jax.Array,
+    b_ids: jax.Array, b_hashes: jax.Array, b_dists: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """R(A ∪ B) oracle for ``merge_sorted_reservoirs`` — sort-based, so it
+    shares no code with the kernel's rank-based one-hot merge.
+
+    Per row: drop the loser of every cross-side hash collision (smaller
+    (dist, id) key wins, exact ties keep A), sort the survivors of the
+    concatenated row by (dist, id), truncate to l_max, pad with
+    (id -1, hash 0, dist +inf).  Returns ``(ids, hashes, dists)``.
+    """
+    ad = a_dists.astype(jnp.float32)
+    bd = b_dists.astype(jnp.float32)
+    l = a_ids.shape[1]
+    va, vb = a_ids != -1, b_ids != -1
+
+    def lt(d1, i1, d2, i2):
+        return (d1 < d2) | ((d1 == d2) & (i1 < i2))
+
+    b_lt_a = lt(bd[:, None, :], b_ids[:, None, :],
+                ad[:, :, None], a_ids[:, :, None])        # [n, lA, lB]
+    pair_ok = va[:, :, None] & vb[:, None, :]
+    collide = (a_hashes[:, :, None] == b_hashes[:, None, :]) & pair_ok
+    keep_a = va & ~jnp.any(collide & b_lt_a, axis=2)
+    keep_b = vb & ~jnp.any(collide & ~b_lt_a, axis=1)
+
+    keep = jnp.concatenate([keep_a, keep_b], axis=1)
+    ids = jnp.where(keep, jnp.concatenate([a_ids, b_ids], axis=1), -1)
+    hs = jnp.where(keep, jnp.concatenate([a_hashes, b_hashes], axis=1), 0)
+    ds = jnp.where(keep, jnp.concatenate([ad, bd], axis=1), jnp.inf)
+
+    order = jnp.lexsort((ids, ds), axis=1)
+    take = jnp.take_along_axis
+    return (take(ids, order, 1)[:, :l], take(hs, order, 1)[:, :l],
+            take(ds, order, 1)[:, :l])

@@ -1,0 +1,62 @@
+"""TPU tiling arithmetic — single-sourced for kernels and the analyzer.
+
+Mosaic lays VMEM arrays out in (sublane, lane) tiles over the trailing two
+dimensions; the minimum tile depends on the element width:
+
+    f32/int32 -> (8, 128)      bf16/f16 -> (16, 128)      int8/fp8 -> (32, 128)
+
+A block whose trailing dims are not tile multiples still *occupies* the
+rounded-up tile in VMEM (a [1, n] f32 row costs 8 sublanes, a [n, 32] f32
+block costs n x 128 lanes), so any byte accounting that ignores the
+rounding under-counts — sometimes by 4x and more for narrow-d points
+blocks.  ``fits_vmem`` (kernels/gather_distance.py) and the static
+contract checker (``repro.analysis``) both price shapes through
+``padded_bytes`` so the admission predicate and the analyzer can never
+disagree about what a block really costs on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+LANE = 128
+
+# minimum sublane rows per element width (bytes)
+_SUBLANE_BY_ITEMSIZE = {1: 32, 2: 16, 4: 8, 8: 8}
+
+
+def sublane(dtype) -> int:
+    """Minimum sublane-tile rows for ``dtype`` (f32 -> 8, bf16 -> 16,
+    int8 -> 32)."""
+    return _SUBLANE_BY_ITEMSIZE.get(np.dtype(dtype).itemsize, 8)
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-int(x) // int(mult)) * int(mult)
+
+
+def padded_shape(shape: tuple, dtype) -> tuple:
+    """``shape`` with the trailing two dims rounded up to the dtype's
+    minimum (sublane, lane) tile — the extents the block actually occupies
+    in VMEM.  0-d and 1-d shapes pad the lane dim only (a 1-d array is one
+    sublane-padded row; ``padded_bytes`` accounts for that)."""
+    shape = tuple(int(s) for s in shape)
+    if not shape:
+        return shape
+    out = list(shape)
+    out[-1] = round_up(out[-1], LANE)
+    if len(out) >= 2:
+        out[-2] = round_up(out[-2], sublane(dtype))
+    return tuple(out)
+
+
+def padded_bytes(shape: tuple, dtype) -> int:
+    """VMEM bytes a block of ``shape``/``dtype`` occupies after tile
+    rounding.  1-d shapes are priced as a single sublane-padded row."""
+    dtype = np.dtype(dtype)
+    if len(shape) == 1:
+        shape = (1, shape[0])
+    p = padded_shape(shape, dtype)
+    total = dtype.itemsize
+    for s in p:
+        total *= max(int(s), 1)
+    return total

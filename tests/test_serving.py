@@ -604,3 +604,73 @@ def test_recall_at_k_known_value():
     f = np.array([[1, 2, 3], [4, 5, 6]])
     t = np.array([[1, 2, 9], [4, 5, 6]])
     assert recall_at_k(f, t, 3) == pytest.approx(5 / 6)
+
+
+def test_resolve_kernel_path_env_budget_parsing(monkeypatch):
+    """Env-override hygiene: malformed / negative values fall back to the
+    default with a warning (a serving process must not crash at dispatch
+    over an env typo); 0 is a real budget meaning "nothing fits"."""
+    from repro.core.beam_search import resolve_kernel_path
+    from repro.kernels.gather_distance import (_VMEM_POINTS_BUDGET,
+                                               vmem_points_budget)
+
+    for bad in ("8MiB", "1e6", "-5"):
+        monkeypatch.setenv("PIPNN_VMEM_POINTS_BUDGET", bad)
+        assert vmem_points_budget() == _VMEM_POINTS_BUDGET
+    monkeypatch.setenv("PIPNN_VMEM_POINTS_BUDGET", "")
+    assert vmem_points_budget() == _VMEM_POINTS_BUDGET
+
+    # zero: every Pallas request streams (the tiniest block "doesn't fit")
+    monkeypatch.setenv("PIPNN_VMEM_POINTS_BUDGET", "0")
+    assert vmem_points_budget() == 0
+    tiny = jnp.zeros((8, 8), jnp.float32)
+    assert resolve_kernel_path(tiny, use_pallas=True) == "hbm"
+
+    # huge: a block far past the default budget goes VMEM-resident
+    monkeypatch.setenv("PIPNN_VMEM_POINTS_BUDGET", str(1 << 40))
+    big = jnp.zeros((1 << 16, 128), jnp.float32)       # 32 MiB
+    assert resolve_kernel_path(big, use_pallas=True) == "vmem"
+
+
+def test_resolve_kernel_path_vmem_budget_boundary_shapes():
+    """The vmem->hbm boundary prices blocks at the TPU-tile-padded
+    footprint: a narrow-d block lane-pads to 128 columns, so it crosses
+    the budget at the same row count as a full-width block."""
+    from repro.core.beam_search import resolve_kernel_path
+    from repro.kernels.gather_distance import fits_vmem
+
+    budget = 1 << 20
+    # (2048, 128) f32 is exactly 1 MiB padded -> last shape that fits
+    assert fits_vmem(jnp.zeros((2048, 128), jnp.float32), budget=budget)
+    assert not fits_vmem(jnp.zeros((2056, 128), jnp.float32), budget=budget)
+    # d=8 lane-pads to 128: same boundary despite 16x fewer payload bytes
+    assert fits_vmem(jnp.zeros((2048, 8), jnp.float32), budget=budget)
+    assert not fits_vmem(jnp.zeros((2056, 8), jnp.float32), budget=budget)
+    assert resolve_kernel_path(jnp.zeros((2056, 8), jnp.float32),
+                               use_pallas=True, vmem_budget=budget) == "hbm"
+    # int8 sublane tile is 32 rows: 4x headroom, minus the f32 scales row
+    pts8 = jnp.zeros((2048, 128), jnp.int8)            # 256 KiB padded
+    scl = jnp.zeros((2048,), jnp.float32)
+    assert fits_vmem(pts8, scl, budget=budget)
+    assert resolve_kernel_path(pts8, scl, use_pallas=True,
+                               vmem_budget=budget) == "vmem"
+
+
+def test_resolve_kernel_path_legacy_use_pallas_mapping():
+    """The full legacy-boolean truth table, f32 and int8: False always
+    means xla; True means vmem-if-fits-else-hbm; explicit kernel_path
+    wins over both."""
+    from repro.core.beam_search import resolve_kernel_path
+
+    x = jnp.zeros((512, 128), jnp.float32)             # 256 KiB
+    s = jnp.zeros((512,), jnp.float32)
+    for scales in (None, s):
+        assert resolve_kernel_path(x, scales, use_pallas=False) == "xla"
+        assert resolve_kernel_path(x, scales, use_pallas=True) == "vmem"
+        assert resolve_kernel_path(x, scales, use_pallas=True,
+                                   vmem_budget=1) == "hbm"
+        for forced in ("vmem", "hbm", "xla"):
+            assert resolve_kernel_path(x, scales, kernel_path=forced,
+                                       use_pallas=False) == forced
+    with pytest.raises(ValueError):
+        resolve_kernel_path(x, kernel_path="dma")
