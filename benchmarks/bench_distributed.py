@@ -2,12 +2,16 @@
 the paper's §6 'natural fit for distributed data processing' — runs the
 same code path the 512-chip dry-run compiles, here on the local device(s).
 Reports tile-step walltime, routing-drop stats, and final index quality
-vs the host-orchestrated build."""
+vs the host-orchestrated build; then sweeps the sharded SERVING packing
+over S in {1, 2, 4, 8} shards, recording the halo replication cost
+(member/ghost/pad rows, halo fraction, per-shard bytes) and the serving
+QPS per shard count into BENCH_qps.json."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, dataset, graph_recall, ground_truth, timed
+from benchmarks.common import (BENCH_QPS_JSON, Row, append_bench_json,
+                               dataset, graph_recall, ground_truth, timed)
 from repro.core import pipnn
 from repro.core.leaf import LeafParams
 from repro.core.pipnn import PiPNNParams
@@ -40,4 +44,49 @@ def run() -> list[Row]:
     rh = graph_recall(idx.graph, idx.start, x, q, truth, beam=48)
     rows.append(("distributed/host_build_ref", secs_h * 1e6,
                  f"recall={rh:.3f} (same dataset, host pipeline)"))
+    rows += halo_sweep(idx, x, q)
+    return rows
+
+
+def halo_sweep(idx, x, q) -> list[Row]:
+    """Sharded serving over every meshable S: the halo fraction
+    (ghost-row share of live rows — the ROADMAP's replication-cost-vs-
+    scale measurement), per-shard footprint and serving QPS, appended to
+    BENCH_qps.json so the scaling curve accumulates across runs."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.serving import ServingIndex
+
+    ndev = len(jax.devices())
+    rows: list[Row] = []
+    records = []
+    for s in (1, 2, 4, 8):
+        if s > ndev:
+            break
+        mesh = Mesh(np.array(jax.devices()[:s]), ("shards",))
+        ssv = ServingIndex.from_index(idx, x, mesh=mesh)
+        hs = ssv.halo_stats()
+        _, secs = timed(ssv.search, q, k=10, beam=32)          # compile
+        _, secs = timed(ssv.search, q, k=10, beam=32, repeat=3)
+        qps = q.shape[0] / secs
+        per_shard = ssv.device_bytes(per_shard=True)
+        rows.append((f"distributed/serve_S{s}", secs * 1e6 / q.shape[0],
+                     f"halo={hs['halo_fraction']:.3f} "
+                     f"ghosts={int(hs['ghosts'].sum())} "
+                     f"bytes/shard={per_shard}"))
+        records.append({
+            "engine": f"sharded_S{s}", "n_shards": s,
+            "halo_fraction": round(hs["halo_fraction"], 4),
+            "members": int(hs["members"].sum()),
+            "ghosts": int(hs["ghosts"].sum()),
+            "pads": int(hs["pads"].sum()),
+            "row_bytes": hs["row_bytes"],
+            "device_bytes_per_shard": per_shard,
+            "qps": round(qps, 1),
+        })
+    if records:
+        append_bench_json(records, path=BENCH_QPS_JSON,
+                          bench="halo_sweep", n=x.shape[0], d=x.shape[1],
+                          n_queries=q.shape[0])
     return rows

@@ -7,6 +7,10 @@
 #    kernel VMEM/tiling/coverage/oracle contracts, jaxpr hot-path +
 #    donation + recompilation audits, AST jit hygiene — fail-fast with a
 #    per-finding file:line report before any test spins up
+# 0b. runs the SPMD sharding auditor (lint --pass spmd) in its own
+#    process under 8 forced host devices: collective whitelist,
+#    replication audit, halo/HBM footprint pricing, host-transfer
+#    budget, mesh-shape stability (PIPS001-005)
 # 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
 # 2. re-runs the partition-invariant + degenerate-data regression suite
 #    standalone (fast; it is also part of tier-1)
@@ -43,12 +47,24 @@ echo "== static contract checker (repro.analysis.lint) =="
 # "file:line: RULE [symbol] message" (see README "Static analysis").
 # Fails fast BEFORE the test suite: a contract violation here would
 # otherwise surface as a slow test failure or a TPU-only OOM.
-if ! python -m repro.analysis.lint; then
+if ! python -m repro.analysis.lint --pass ast --pass kernels --pass jaxpr; then
   echo ""
   echo "lint FAILED: fix the findings above (rule catalog:"
   echo "  python -m repro.analysis.lint --list-rules)."
   echo "The baseline (src/repro/analysis/baseline.txt) stays empty —"
   echo "baselining is only for genuinely unfixable findings."
+  exit 1
+fi
+
+echo "== SPMD sharding auditor (lint --pass spmd, 8 simulated devices) =="
+# separate process: the forced-device flag must land before jax
+# initializes so the auditor gets its full S in {1,2,4,8} mesh sweep
+if ! XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+     python -m repro.analysis.lint --pass spmd; then
+  echo ""
+  echo "SPMD audit FAILED: a shard_map program broke its declared"
+  echo "sharding contract (PIPS001-005; see README 'Static analysis')."
+  echo "Contracts are registered in src/repro/analysis/spmd_audit.py."
   exit 1
 fi
 

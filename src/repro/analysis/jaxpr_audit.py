@@ -252,5 +252,61 @@ def audit_recompilation(query_chunk: int | None = 4) -> list[Finding]:
     return []
 
 
+def audit_recompilation_sharded(query_chunk: int | None = 4) -> list[Finding]:
+    """PIPJ004 over the SHARDED serving path: replay small varying batches
+    through ``ShardedServingIndex.search`` with chunk padding on and
+    check the per-index jit cache (the shard_map'd engine variants plus
+    the ``cross_shard_topk`` merge) stays at one variant per (beam,
+    expansions) — batch size must never leak into a mesh program's
+    dispatch shape, where a recompile also re-lowers every collective.
+
+    No-op on single-device hosts (the sharded path needs a real mesh to
+    say anything a plain PIPJ004 run doesn't)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed import serving as dsv
+
+    if len(jax.devices()) < 2:
+        return []
+    s = min(4, len(jax.devices()))
+    rng = np.random.default_rng(0)
+    n, d = 96, 16
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    graph = rng.integers(0, n, size=(n, 4)).astype(np.int32)
+    mesh = Mesh(np.array(jax.devices()[:s]), ("shards",))
+    ssv = dsv.ShardedServingIndex.from_graph(graph, x, 0, mesh=mesh)
+    _clear_cache(dsv.cross_shard_topk)
+
+    beams, expansions_sweep, batch_sizes = (4, 8), (1, 2), (1, 3, 7, 12)
+    for beam in beams:
+        for e in expansions_sweep:
+            for nq in batch_sizes:
+                q = rng.normal(size=(nq, d)).astype(np.float32)
+                ssv.search(q, k=4, beam=beam, expansions=e,
+                           query_chunk=query_chunk)
+    bound = len(beams) * len(expansions_sweep)
+    engine = sum(_cache_size(fn) for fn in ssv._search_cache.values())
+    findings: list[Finding] = []
+    if engine > bound:
+        findings.append(Finding(
+            "PIPJ004", "src/repro/distributed/serving.py", 0,
+            "ShardedServingIndex.search",
+            f"sharded serving session compiled {engine} engine variants, "
+            f"bound is {bound} (|beams| x |expansions|) — batch size is "
+            f"leaking into the shard_map dispatch shape despite "
+            f"query_chunk"))
+    merge = _cache_size(dsv.cross_shard_topk)
+    if merge > len(beams):
+        findings.append(Finding(
+            "PIPJ004", "src/repro/distributed/serving.py", 0,
+            "cross_shard_topk",
+            f"cross-shard merge compiled {merge} variants, bound is "
+            f"{len(beams)} (one per beam width) — batch size is leaking "
+            f"into the merge dispatch shape"))
+    return findings
+
+
 def audit_all() -> list[Finding]:
-    return audit_hot_paths() + audit_recompilation()
+    return (audit_hot_paths() + audit_recompilation()
+            + audit_recompilation_sharded())

@@ -1,7 +1,8 @@
 """``python -m repro.analysis.lint`` — the static contract checker CLI.
 
-Runs the three analysis passes (AST lint, kernel contracts, jaxpr audit)
-and reports findings as ``file:line: RULE [symbol] message``.  Exit code
+Runs the four analysis passes (AST lint, kernel contracts, jaxpr audit,
+SPMD sharding audit) and reports findings as
+``file:line: RULE [symbol] message``.  Exit code
 is 0 iff every finding is covered by the baseline file — which is checked
 in EMPTY and expected to stay that way: pre-existing violations get fixed,
 not baselined; the file exists so a genuinely unfixable finding (e.g. a
@@ -50,9 +51,22 @@ RULES: dict[str, str] = {
     "PIPA003": "mutable default argument",
     "PIPA004": "shape-controlling parameter of a jitted function missing "
                "from static_argnames",
+    # SPMD sharding auditor (repro.analysis.spmd_audit)
+    "PIPS001": "collective primitive not in the program's declared "
+               "(primitive, mesh axis) contract — per-shard search "
+               "bodies must be collective-free",
+    "PIPS002": "operand declared sharded in in_specs lowered to a "
+               "replicated HLO sharding (or replicated without a "
+               "whitelist entry)",
+    "PIPS003": "per-shard halo packing prices over the per-device HBM "
+               "budget (tile-padded bytes, PIPNN_DEVICE_HBM_BUDGET)",
+    "PIPS004": "serving call crossed the host boundary outside the "
+               "declared to_device/to_host budget",
+    "PIPS005": "traced program structure differs across shard counts "
+               "(shard count leaked into Python control flow)",
 }
 
-PASSES = ("ast", "kernels", "jaxpr")
+PASSES = ("ast", "kernels", "jaxpr", "spmd")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,7 +126,28 @@ def run_all(root: pathlib.Path | None = None,
         from repro.analysis import jaxpr_audit
 
         findings += jaxpr_audit.audit_all()
+    if "spmd" in passes:
+        from repro.analysis import spmd_audit
+
+        findings += spmd_audit.audit_all()
     return findings
+
+
+def _force_host_devices(n: int = 8) -> None:
+    """Give the SPMD pass a real mesh sweep on single-accelerator hosts:
+    prepend ``--xla_force_host_platform_device_count=N`` to XLA_FLAGS.
+    Only effective before jax initializes — a no-op when jax is already
+    imported (e.g. lint called from a test process) or the flag is
+    already set; the audits then clamp to whatever devices exist."""
+    import os
+
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n} {flags}".strip()
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -143,6 +178,8 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     passes = tuple(args.passes) if args.passes else PASSES
+    if "spmd" in passes:
+        _force_host_devices()
     findings = run_all(passes=passes)
 
     if args.write_baseline:

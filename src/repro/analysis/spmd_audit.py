@@ -1,0 +1,620 @@
+"""SPMD sharding auditor over the shard_map programs — PIPS001-PIPS005.
+
+The repo has two shard_map program families: the sharded serving path
+(``distributed/serving.py`` — per-shard beam search + cross-shard top-k)
+and the distributed build supersteps (``launch/build_index.py`` — tile
+step, final prune).  GGNN's multi-GPU line (PAPERS.md) makes the scaling
+economics explicit: replication and halo cost ARE the knobs at billion
+scale, and none of them fail loudly — a per-shard body that sprouts an
+accidental collective still returns correct results (slower every step),
+an operand that lowers replicated still serves (at S times the HBM), a
+shard count baked into Python control flow still works (recompiling per
+mesh).  This pass proves the contracts statically, on forced host-device
+meshes, before a pod slice ever spins up:
+
+  PIPS001  collective whitelist — every collective primitive anywhere in
+           the traced program must appear in the program's DECLARED
+           contract ((primitive, mesh axis) pairs, declared at the
+           registration site below).  The per-shard search body declares
+           the empty contract: it must be collective-free.
+  PIPS002  replication audit — operands declared sharded (``P(axis)`` in
+           in_specs) must not lower to fully-replicated HLO shardings;
+           intentionally replicated operands (queries, hyperplanes) must
+           be whitelisted, and their per-device cost is priced and
+           reported.
+  PIPS003  per-shard footprint pricing — the ``[S, m, ...]`` halo packing
+           (member + ghost + pad rows, measured via
+           ``ShardedServingIndex.halo_stats``) and a production-scale
+           envelope are priced at the TPU-tile-padded byte cost
+           (``kernels/tiling.padded_bytes``) and gated against the
+           per-device HBM budget (``PIPNN_DEVICE_HBM_BUDGET`` env var,
+           default 16 GiB).  The halo fraction is reported per shard
+           count.
+  PIPS004  host-transfer audit — a ``ShardedServingIndex.search`` call is
+           replayed under ``core.transfers.ledger`` with
+           ``jax.transfer_guard("disallow")``; any transfer not routed
+           through the declared batch-entry/exit boundaries raises, and
+           the routed counts are gated at the path's declared
+           ``TRANSFER_BUDGET``.
+  PIPS005  mesh-shape stability — the traced program must be structurally
+           identical (same primitive skeleton, nested jaxprs included)
+           across S in {1, 2, 4, 8}: shard count must never leak into
+           Python control flow, or every mesh size recompiles its own
+           program (the pre-PR-8 ``cross_shard_topk`` Python fold was
+           exactly this bug).
+
+Run via ``python -m repro.analysis.lint`` (the ``spmd`` pass); the lint
+driver forces ``--xla_force_host_platform_device_count=8`` when jax is
+not yet initialized, so the full 1/2/4/8 sweep runs on any host.  On an
+already-initialized smaller host the sweeps clamp to the available
+device count and the multi-device-only audits degrade to no-ops (the CI
+job and check.sh step 0b pin the 8-device configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+import sys
+from typing import Callable
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+# every jax collective primitive name (jaxpr-level) the whitelist knows;
+# axis_index is deliberately NOT here — reading your own coordinate is
+# free and collective-free
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "pmax", "pmin", "pmean", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "psum_scatter", "reduce_scatter",
+    "pgather", "pdot", "psum2", "all_gather_invariant",
+})
+
+# per-device HBM the footprint model gates against (v5e-class default)
+DEFAULT_HBM_BUDGET = 16 * 1024**3
+HBM_BUDGET_ENV = "PIPNN_DEVICE_HBM_BUDGET"
+
+SWEEP = (1, 2, 4, 8)
+
+
+def hbm_budget() -> int:
+    return int(os.environ.get(HBM_BUDGET_ENV, DEFAULT_HBM_BUDGET))
+
+
+def shard_counts(minimum: int = 1) -> list[int]:
+    """The S sweep this host can actually mesh: {1, 2, 4, 8} clamped to
+    the visible device count."""
+    import jax
+
+    ndev = len(jax.devices())
+    return [s for s in SWEEP if minimum <= s <= ndev]
+
+
+def _report(msg: str) -> None:
+    """Progress/measurement lines go to stderr so ``lint --json`` stdout
+    stays machine-readable."""
+    print(f"  [spmd] {msg}", file=sys.stderr)
+
+
+# ---------------------------------------------------------------------------
+# program registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SPMDProgram:
+    """One concrete traceable instance of a registered program at a given
+    shard count: the entry callable, its positional args (arrays or
+    ShapeDtypeStructs), and which arg names the in_specs declare sharded
+    (everything else is intentionally replicated)."""
+
+    fn: Callable
+    args: tuple
+    arg_names: tuple
+    sharded: frozenset
+
+
+@dataclasses.dataclass(frozen=True)
+class SPMDSpec:
+    """A registered SPMD entry point + its declared contracts.
+
+    ``collectives`` is the collective contract: the exact set of
+    (primitive name, mesh axis) pairs the program is allowed to contain —
+    declared HERE, at the registration site, so adding a collective to a
+    program is a reviewed two-line diff (the code and the contract).
+    ``replicated_ok`` whitelists arg names that intentionally lower to
+    replicated shardings (every other arg must shard)."""
+
+    name: str
+    path: str
+    symbol: str
+    build: Callable
+    collectives: frozenset
+    replicated_ok: frozenset
+
+
+@functools.lru_cache(maxsize=None)
+def _tiny_packing(s: int, int8: bool = False):
+    """A tiny ShardedServingIndex over ``s`` devices (cached per run) —
+    shared by the serving program builder, the footprint audit and the
+    transfer audit."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed.serving import ShardedServingIndex
+
+    rng = np.random.default_rng(0)
+    n, d, r = 192, 16, 4
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    graph = rng.integers(0, n, size=(n, r)).astype(np.int32)
+    mesh = Mesh(np.array(jax.devices()[:s]), ("shards",))
+    return ShardedServingIndex.from_graph(
+        graph, x, 0, mesh=mesh, dtype="int8" if int8 else None)
+
+
+_SEARCH_STATICS = dict(beam=8, iters=12, expansions=2, early_exit=True,
+                       kernel_path="xla", interpret=False)
+
+
+def _serving_program(s: int) -> SPMDProgram:
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ssv = _tiny_packing(s)
+    fn = ssv._sharded_search_fn(**_SEARCH_STATICS)
+    q = jax.device_put(np.zeros((4, ssv.points.shape[2]), np.float32),
+                       NamedSharding(ssv.mesh, P()))
+    args = (ssv.gids, ssv.graph, ssv.points, ssv.norms, ssv.starts,
+            ssv._scales_operand(), q)
+    names = ("gids", "graph", "points", "norms", "starts", "scales",
+             "queries")
+    return SPMDProgram(fn=fn, args=args, arg_names=names,
+                       sharded=frozenset(names) - {"queries"})
+
+
+def _topk_program(s: int) -> SPMDProgram:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.serving import cross_shard_topk
+
+    args = (jax.ShapeDtypeStruct((s, 4, 8), jnp.int32),
+            jax.ShapeDtypeStruct((s, 4, 8), jnp.float32))
+    # pure jit over already-gathered blocks: no shard_map in_specs, so
+    # nothing for the replication audit to check (sharded = empty)
+    return SPMDProgram(fn=functools.partial(cross_shard_topk, k=10),
+                       args=args, arg_names=("ids_s", "ds_s"),
+                       sharded=frozenset())
+
+
+def _build_avals(p):
+    import jax
+    import jax.numpy as jnp
+
+    sds = jax.ShapeDtypeStruct
+    return {
+        "points": sds((p.n_tile, p.dim), jnp.float32),
+        "hyperplanes": sds((p.m_bits, p.dim), jnp.float32),
+        "res_ids": sds((p.n_tile, p.l_max), jnp.int32),
+        "res_hashes": sds((p.n_tile, p.l_max), jnp.int32),
+        "res_dists": sds((p.n_tile, p.l_max), jnp.float32),
+    }
+
+
+def _tile_program(s: int) -> SPMDProgram:
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.launch import build_index as bi
+
+    mesh = Mesh(np.array(jax.devices()[:s]), ("data",))
+    p = bi.DistBuildParams.tiny()
+    step = bi.make_tile_step(mesh, p).shard_step
+    a = _build_avals(p)
+    names = ("points", "hyperplanes", "res_ids", "res_hashes", "res_dists")
+    return SPMDProgram(fn=step, args=tuple(a[n] for n in names),
+                       arg_names=names,
+                       sharded=frozenset(names) - {"hyperplanes"})
+
+
+def _prune_program(s: int) -> SPMDProgram:
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.launch import build_index as bi
+
+    mesh = Mesh(np.array(jax.devices()[:s]), ("data",))
+    p = bi.DistBuildParams.tiny()
+    step = bi.make_final_prune_step(mesh, p)
+    a = _build_avals(p)
+    names = ("points", "res_ids", "res_dists")
+    return SPMDProgram(fn=step, args=tuple(a[n] for n in names),
+                       arg_names=names, sharded=frozenset(names))
+
+
+def default_specs() -> tuple:
+    """The registry.  Collective contracts are DECLARED here: change a
+    program's communication pattern and this tuple is the diff a reviewer
+    sees."""
+    return (
+        SPMDSpec(
+            name="sharded_search",
+            path="src/repro/distributed/serving.py",
+            symbol="ShardedServingIndex._sharded_search_fn",
+            build=_serving_program,
+            # the whole design: each shard searches ALONE; the only
+            # cross-shard step is the separate top-k merge
+            collectives=frozenset(),
+            replicated_ok=frozenset({"queries"}),
+        ),
+        SPMDSpec(
+            name="cross_shard_topk",
+            path="src/repro/distributed/serving.py",
+            symbol="cross_shard_topk",
+            build=_topk_program,
+            collectives=frozenset(),
+            replicated_ok=frozenset({"ids_s", "ds_s"}),
+        ),
+        SPMDSpec(
+            name="build_tile_step",
+            path="src/repro/launch/build_index.py",
+            symbol="make_tile_step",
+            build=_tile_program,
+            # leaders gather + two capacity-routed exchanges + the stats
+            # reduction — the superstep schedule, nothing else
+            collectives=frozenset({("all_gather", "data"),
+                                   ("all_to_all", "data"),
+                                   ("psum", "data")}),
+            replicated_ok=frozenset({"hyperplanes"}),
+        ),
+        SPMDSpec(
+            name="build_final_prune",
+            path="src/repro/launch/build_index.py",
+            symbol="make_final_prune_step",
+            build=_prune_program,
+            # request/response candidate-vector exchange only
+            collectives=frozenset({("all_to_all", "data")}),
+            replicated_ok=frozenset(),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# jaxpr helpers
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(params: dict):
+    """Nested jaxprs hiding inside an eqn's params (pjit / shard_map /
+    scan / while / cond ...), in deterministic key order."""
+    for key in sorted(params):
+        v = params[key]
+        for item in (v if isinstance(v, (tuple, list)) else (v,)):
+            if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                yield item
+
+
+def _iter_eqns(jaxpr):
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        j = getattr(j, "jaxpr", j)          # ClosedJaxpr -> Jaxpr
+        for eqn in j.eqns:
+            yield eqn
+            stack.extend(_sub_jaxprs(eqn.params))
+
+
+def _collective_axes(eqn) -> tuple:
+    """The mesh axes a collective eqn operates over (from its ``axes`` /
+    ``axis_name`` param, whichever spelling the primitive uses)."""
+    for key in ("axes", "axis_name"):
+        v = eqn.params.get(key)
+        if v is not None:
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            return tuple(str(a) for a in vs)
+    return ()
+
+
+def collectives_in(fn, args) -> set:
+    """All (collective primitive, mesh axis) pairs anywhere in the traced
+    program."""
+    import jax
+
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    found = set()
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            for ax in _collective_axes(eqn) or ("<unknown-axis>",):
+                found.add((eqn.primitive.name, ax))
+    return found
+
+
+def structural_fingerprint(fn, args) -> tuple:
+    """The program's primitive skeleton: nested (primitive name,
+    sub-fingerprints) tuples.  Deliberately ignores shapes, dtypes and
+    scalar params — a scan whose ``length`` grows with S is the SAME
+    program; a loop that UNROLLS with S is not."""
+    import jax
+
+    def fp(jaxpr) -> tuple:
+        j = getattr(jaxpr, "jaxpr", jaxpr)
+        return tuple(
+            (eqn.primitive.name,
+             tuple(fp(sj) for sj in _sub_jaxprs(eqn.params)))
+            for eqn in j.eqns)
+
+    return fp(jax.make_jaxpr(fn)(*args))
+
+
+# ---------------------------------------------------------------------------
+# PIPS001 — collective whitelist
+# ---------------------------------------------------------------------------
+
+def audit_collectives(specs: tuple | None = None) -> list:
+    specs = default_specs() if specs is None else specs
+    findings = []
+    for spec in specs:
+        for s in shard_counts():
+            prog = spec.build(s)
+            undeclared = collectives_in(prog.fn, prog.args) - spec.collectives
+            if undeclared:
+                allowed = (sorted(spec.collectives)
+                           or "none (collective-free body)")
+                for prim, ax in sorted(undeclared):
+                    findings.append(Finding(
+                        "PIPS001", spec.path, 0, spec.symbol,
+                        f"[S={s}] undeclared collective '{prim}' over "
+                        f"mesh axis '{ax}' — the registered contract "
+                        f"allows {allowed}; either remove it or extend "
+                        f"the contract at the spmd_audit registration "
+                        f"site"))
+                break       # same program family; don't repeat per S
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PIPS002 — replication audit
+# ---------------------------------------------------------------------------
+
+def _input_shardings(fn, args):
+    import jax
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args).compile()
+    in_shardings, _ = compiled.input_shardings
+    return in_shardings
+
+
+def audit_replication(specs: tuple | None = None) -> list:
+    """Compile each program at the LARGEST available shard count and read
+    the actual HLO input shardings back.  S=1 is skipped: on a one-device
+    mesh sharded and replicated are the same placement and
+    ``is_fully_replicated`` is vacuously true.  Compiling only at max S
+    bounds the pass's cost (compile dominates trace ~7:1 here)."""
+    from repro.kernels.tiling import padded_bytes
+
+    counts = shard_counts(minimum=2)
+    if not counts:
+        return []
+    s = counts[-1]
+    specs = default_specs() if specs is None else specs
+    findings = []
+    for spec in specs:
+        prog = spec.build(s)
+        if not prog.sharded:
+            continue        # pure-jit program: no in_specs to audit
+        shardings = _input_shardings(prog.fn, prog.args)
+        for name, arg, sh in zip(prog.arg_names, prog.args, shardings):
+            if sh is None:
+                # operand unused by this variant (e.g. the dummy scales
+                # in the f32 body) — pruned by the compiler, no bytes
+                # resident to audit
+                continue
+            replicated = bool(sh.is_fully_replicated)
+            nbytes = padded_bytes(tuple(arg.shape), arg.dtype)
+            if name in prog.sharded and replicated:
+                findings.append(Finding(
+                    "PIPS002", spec.path, 0, spec.symbol,
+                    f"[S={s}] operand '{name}' is declared P(axis) in "
+                    f"in_specs but lowered to a fully-replicated HLO "
+                    f"sharding — every device holds all {nbytes} bytes "
+                    f"instead of 1/{s}"))
+            elif name not in prog.sharded and replicated:
+                if name in spec.replicated_ok:
+                    _report(f"{spec.name}: replicated operand '{name}' "
+                            f"(whitelisted) costs {nbytes} bytes/device")
+                else:
+                    findings.append(Finding(
+                        "PIPS002", spec.path, 0, spec.symbol,
+                        f"[S={s}] operand '{name}' is replicated across "
+                        f"the mesh ({nbytes} bytes on every device) but "
+                        f"not whitelisted — either shard it or add it to "
+                        f"replicated_ok at the registration site"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PIPS003 — per-shard footprint pricing
+# ---------------------------------------------------------------------------
+
+# the billion-scale envelope the static model prices: BigANN-shaped int8
+# serving over a 256-device pod slice
+PRODUCTION_ENVELOPE = dict(name="bigann-1B/int8/S=256", n_points=1 << 30,
+                           dim=128, degree=64, n_shards=256, int8=True)
+
+
+def price_shard_packing(n_points: int, dim: int, degree: int,
+                        n_shards: int, *, int8: bool = False,
+                        halo_fraction: float = 0.0,
+                        pad_fraction: float = 0.10) -> dict:
+    """Static per-device byte model of the ``[S, m, ...]`` halo packing,
+    priced at the TPU-tile-padded footprint (``tiling.padded_bytes`` —
+    the same pricing ``fits_vmem`` and the kernel contracts use, so the
+    analyzer can never disagree with the admission predicates).
+
+    ``m`` = owned rows, grown by ``halo_fraction`` ghosts and
+    ``pad_fraction`` pad-to-max slack across shards."""
+    from repro.kernels.tiling import padded_bytes
+
+    owned = math.ceil(n_points / n_shards)
+    m = math.ceil(owned * (1.0 + halo_fraction) * (1.0 + pad_fraction))
+    parts = {
+        "points": padded_bytes((m, dim), np.int8 if int8 else np.float32),
+        "graph": padded_bytes((m, degree), np.int32),
+        "gids": padded_bytes((m,), np.int32),
+        "norms": padded_bytes((m,), np.float32),
+    }
+    if int8:
+        parts["scales"] = padded_bytes((m,), np.float32)
+    total = sum(parts.values())
+    parts["rows"] = m
+    parts["total"] = total
+    return parts
+
+
+def audit_footprint(budget: int | None = None,
+                    envelope: dict | None = None) -> list:
+    """Measure the tiny packings' halo fraction per shard count (reported
+    — the ROADMAP's halo-vs-scale measurement), gate each measured
+    per-shard footprint against the HBM budget, then gate the
+    production-scale envelope priced with the WORST measured halo
+    fraction."""
+    from repro.kernels.tiling import padded_bytes
+
+    budget = hbm_budget() if budget is None else int(budget)
+    envelope = PRODUCTION_ENVELOPE if envelope is None else envelope
+    findings = []
+    worst_halo = 0.0
+    for s in shard_counts(minimum=2):
+        ssv = _tiny_packing(s)
+        hs = ssv.halo_stats()
+        worst_halo = max(worst_halo, float(hs["halo_fraction"]))
+        m, d = ssv.shard_capacity, ssv.points.shape[2]
+        r = ssv.graph.shape[2]
+        per_shard = (padded_bytes((m, d), ssv.points.dtype)
+                     + padded_bytes((m, r), np.int32)
+                     + padded_bytes((m,), np.int32)          # gids
+                     + padded_bytes((m,), np.float32))       # norms
+        _report(f"S={s}: halo_fraction={hs['halo_fraction']:.3f} "
+                f"members={int(hs['members'].sum())} "
+                f"ghosts={int(hs['ghosts'].sum())} "
+                f"pads={int(hs['pads'].sum())} "
+                f"per_shard_padded_bytes={per_shard}")
+        if per_shard > budget:
+            findings.append(Finding(
+                "PIPS003", "src/repro/distributed/serving.py", 0,
+                "ShardedServingIndex.from_graph",
+                f"[S={s}] measured per-shard packing is {per_shard} "
+                f"tile-padded bytes, over the {budget}-byte per-device "
+                f"HBM budget ({HBM_BUDGET_ENV})"))
+    priced = price_shard_packing(
+        envelope["n_points"], envelope["dim"], envelope["degree"],
+        envelope["n_shards"], int8=envelope.get("int8", False),
+        halo_fraction=worst_halo)
+    _report(f"envelope {envelope['name']}: rows/shard={priced['rows']} "
+            f"(halo_fraction={worst_halo:.3f}) total/shard="
+            f"{priced['total']} bytes vs budget {budget}")
+    if priced["total"] > budget:
+        findings.append(Finding(
+            "PIPS003", "src/repro/distributed/serving.py", 0,
+            "ShardedServingIndex.from_graph",
+            f"production envelope {envelope['name']} prices at "
+            f"{priced['total']} tile-padded bytes/device (halo fraction "
+            f"{worst_halo:.3f}), over the {budget}-byte HBM budget — "
+            f"raise n_shards or shrink the halo before a pod run"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PIPS004 — host-transfer audit
+# ---------------------------------------------------------------------------
+
+def audit_transfers(budget: dict | None = None,
+                    search_call: Callable | None = None) -> list:
+    """Replay one sharded search call under the transfer ledger with
+    implicit transfers hard-disabled.  ``search_call(ssv, q)`` is
+    injectable so the rule's positive fixture can demonstrate a
+    host-bouncing serving path."""
+    import jax
+
+    from repro.core import transfers
+    from repro.distributed.serving import ShardedServingIndex
+
+    counts = shard_counts()
+    if not counts:
+        return []
+    s = counts[-1]
+    ssv = _tiny_packing(s)
+    budget = dict(ShardedServingIndex.TRANSFER_BUDGET
+                  if budget is None else budget)
+    q = np.zeros((4, ssv.points.shape[2]), np.float32)
+    call = (search_call if search_call is not None
+            else lambda sv, qq: sv.search(qq, k=4, beam=8))
+    path, symbol = ("src/repro/distributed/serving.py",
+                    "ShardedServingIndex.search")
+    call(ssv, q)          # warm-up: compile outside the guard
+    try:
+        with transfers.ledger() as counted, jax.transfer_guard("disallow"):
+            call(ssv, q)
+    except Exception as e:  # noqa: BLE001 — jax raises XlaRuntimeError
+        return [Finding(
+            "PIPS004", path, 0, symbol,
+            f"[S={s}] search performs an implicit host transfer outside "
+            f"the declared to_device/to_host boundaries: "
+            f"{str(e).splitlines()[0][:160]}")]
+    over = {k: (counted.get(k, 0), v) for k, v in budget.items()
+            if counted.get(k, 0) > v}
+    _report(f"S={s}: transfer ledger per search call {counted} "
+            f"(budget {budget})")
+    if over:
+        return [Finding(
+            "PIPS004", path, 0, symbol,
+            f"[S={s}] search call crossed the host boundary more than "
+            f"its declared budget: " + ", ".join(
+                f"{k}={got} > {bound}"
+                for k, (got, bound) in sorted(over.items())))]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# PIPS005 — mesh-shape stability
+# ---------------------------------------------------------------------------
+
+def audit_mesh_stability(specs: tuple | None = None) -> list:
+    specs = default_specs() if specs is None else specs
+    counts = shard_counts()
+    if len(counts) < 2:
+        return []
+    findings = []
+    for spec in specs:
+        fps = {}
+        for s in counts:
+            prog = spec.build(s)
+            fps[s] = structural_fingerprint(prog.fn, prog.args)
+        base = fps[counts[0]]
+        diverged = [s for s in counts[1:] if fps[s] != base]
+        if diverged:
+            findings.append(Finding(
+                "PIPS005", spec.path, 0, spec.symbol,
+                f"traced program structure differs across shard counts "
+                f"(S={counts[0]} vs S={diverged}) — the shard count "
+                f"leaks into Python control flow, so every mesh size "
+                f"compiles its own program; fold the S-dependence into "
+                f"lax control flow (scan/vmap) instead"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def audit_all() -> list:
+    import jax
+
+    _report(f"device sweep S={shard_counts()} "
+            f"(visible devices: {len(jax.devices())})")
+    return (audit_collectives()
+            + audit_replication()
+            + audit_footprint()
+            + audit_transfers()
+            + audit_mesh_stability())

@@ -95,6 +95,18 @@ class ServingIndex:
     metric: str = "l2"
     scales: jax.Array | None = None   # [n] f32 dequant scales (int8 packing)
     vmem_budget: int | None = None    # VMEM points budget override (bytes)
+    _start_dev: Any = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+
+    def _start_operand(self) -> jax.Array:
+        """``start`` as a cached device scalar: passed as a Python int it
+        would be a fresh implicit scalar h2d on EVERY dispatch (and a
+        hard error under ``jax.transfer_guard("disallow")``)."""
+        if self._start_dev is None:
+            from repro.core.transfers import to_device
+
+            self._start_dev = to_device(np.int32(self.start))
+        return self._start_dev
 
     @property
     def n(self) -> int:
@@ -227,6 +239,8 @@ class ServingIndex:
         """
         from repro.core import beam_search as _bs
 
+        if query_chunk is not None and int(query_chunk) <= 0:
+            raise ValueError(f"query_chunk must be >= 1, got {query_chunk}")
         q = np.ascontiguousarray(queries, dtype=np.float32)
         nq = q.shape[0]
         iters_cap = int(iters if iters is not None
@@ -248,10 +262,13 @@ class ServingIndex:
                     "kernel_path": path,
                 }
             return out
+        from repro.core.transfers import to_device, to_host
+
         # fixed chunk even when nq < query_chunk: small batches pad UP so
         # every dispatch shares one [chunk, d] dispatch shape — otherwise
         # each distinct small nq compiles its own engine variant
         chunk = int(query_chunk) if query_chunk else nq
+        start_dev = self._start_operand()
         ids_parts, hops_parts, comps_parts = [], [], []
         for s in range(0, nq, chunk):
             qc = q[s : s + chunk]
@@ -259,16 +276,17 @@ class ServingIndex:
             if pad:
                 qc = np.pad(qc, ((0, pad), (0, 0)))
             ids, _, hops, comps = _bs.beam_search_batch(
-                self.graph, self.points, qc,
-                start=self.start, beam=beam, iters=iters, metric=self.metric,
+                self.graph, self.points, to_device(qc),
+                start=start_dev, beam=beam, iters=iters, metric=self.metric,
                 expansions=expansions, norms=self.norms, scales=self.scales,
                 early_exit=early_exit, kernel_path=path,
                 interpret=interpret, with_stats=True,
             )
             take = chunk - pad
-            ids_parts.append(np.asarray(ids)[:take])
-            hops_parts.append(np.asarray(hops)[:take])
-            comps_parts.append(np.asarray(comps)[:take])
+            ids_parts.append(to_host(ids)[:take])
+            if with_stats:
+                hops_parts.append(to_host(hops)[:take])
+                comps_parts.append(to_host(comps)[:take])
         ids = np.concatenate(ids_parts, axis=0)
         # beam < k: -1-pad to [Q, k] like the np oracle path
         out = _bs.pad_ids(ids, k).astype(np.int64)

@@ -1,0 +1,81 @@
+"""Declared host<->device transfer boundaries for the serving paths.
+
+A serving call should touch the host exactly twice: queries in, results
+out.  Anything else — a numpy array falling into a jit dispatch, an index
+packed on one device getting resharded across the mesh on EVERY call — is
+an implicit transfer jax performs silently, and at pod scale it is the
+difference between serving from HBM and serving from the host NIC.
+
+This module makes the two legitimate boundaries EXPLICIT and everything
+else a hard error:
+
+  * ``to_device(x[, sharding])`` / ``to_host(x)`` are the only sanctioned
+    crossings.  Each wraps its transfer in a local
+    ``jax.transfer_guard("allow")`` scope, so serving code routed through
+    them keeps working even when the caller holds the whole call under
+    ``jax.transfer_guard("disallow")`` — the configuration the test
+    fixture (tests/conftest.py) and the PIPS004 lint audit run under,
+    where any *unrouted* transfer raises instead of silently shipping
+    bytes.
+  * ``ledger()`` counts crossings per scope.  The SPMD auditor
+    (``analysis/spmd_audit.py``, rule PIPS004) replays a sharded search
+    under a ledger and gates the counts against the serving path's
+    declared per-call budget
+    (``ShardedServingIndex.TRANSFER_BUDGET``).
+
+Counting is thread-local and zero-cost when no ledger is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LOCAL = threading.local()
+
+
+def _active() -> dict | None:
+    return getattr(_LOCAL, "counts", None)
+
+
+def _bump(kind: str) -> None:
+    counts = _active()
+    if counts is not None:
+        counts[kind] += 1
+
+
+@contextlib.contextmanager
+def ledger():
+    """Count declared boundary crossings: yields a live
+    ``{"h2d": int, "d2h": int}`` dict that updates as ``to_device`` /
+    ``to_host`` run inside the scope.  Nests; the inner scope shadows."""
+    prev = _active()
+    _LOCAL.counts = {"h2d": 0, "d2h": 0}
+    try:
+        yield _LOCAL.counts
+    finally:
+        _LOCAL.counts = prev
+
+
+def to_device(x, sharding=None):
+    """The batch-ENTRY boundary: one declared host->device transfer.
+
+    With ``sharding`` (e.g. a replicated ``NamedSharding`` for a query
+    batch entering a mesh program) the result is committed to it, so the
+    downstream jit dispatch never needs an implicit reshard."""
+    with jax.transfer_guard("allow"):
+        out = (jax.device_put(x, sharding) if sharding is not None
+               else jnp.asarray(x))
+    _bump("h2d")
+    return out
+
+
+def to_host(x) -> np.ndarray:
+    """The batch-EXIT boundary: one declared device->host transfer."""
+    with jax.transfer_guard("allow"):
+        out = np.asarray(x)
+    _bump("d2h")
+    return out

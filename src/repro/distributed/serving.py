@@ -90,16 +90,26 @@ def cross_shard_topk(ids_s: jax.Array, ds_s: jax.Array, *, k: int
     folding one block at a time into a k-bounded beam is exact.  ``k``
     may exceed the per-shard beam width B — the union supplies up to
     ``S * B`` entries.
+
+    The fold is a ``lax.scan`` over the shard axis (same left-to-right
+    block order as the old Python loop, so bit-identical results): the
+    traced program is one merge body regardless of S, which is what the
+    mesh-shape stability rule (PIPS005) requires — a Python loop here
+    would bake the shard count into the jaxpr and recompile per mesh
+    size.
     """
     from repro.core.beam_search import merge_block
 
-    s, nq, _ = ids_s.shape
-    ids = jnp.full((nq, k), -1, jnp.int32)
-    ds = jnp.full((nq, k), jnp.inf, jnp.float32)
-    vis = jnp.zeros((nq, k), dtype=bool)
-    for i in range(s):
-        ids, ds, vis = merge_block(ids, ds, vis,
-                                   ids_s[i].astype(jnp.int32), ds_s[i])
+    _, nq, _ = ids_s.shape
+    init = (jnp.full((nq, k), -1, jnp.int32),
+            jnp.full((nq, k), jnp.inf, jnp.float32),
+            jnp.zeros((nq, k), dtype=bool))
+
+    def fold(carry, block):
+        bids, bds = block
+        return merge_block(*carry, bids.astype(jnp.int32), bds), None
+
+    (ids, ds, _), _ = jax.lax.scan(fold, init, (ids_s, ds_s))
     return ids, ds
 
 
@@ -125,8 +135,18 @@ class ShardedServingIndex:
     n_probes: int = 2
     vmem_budget: int | None = None
     n_points: int = 0         # dataset size (each point OWNED by 1 shard)
+    owned: np.ndarray | None = None   # [S] owned (member) row counts
     _search_cache: dict = dataclasses.field(default_factory=dict,
                                             repr=False, compare=False)
+    _dummy_scales: Any = dataclasses.field(default=None, repr=False,
+                                           compare=False)
+
+    # Declared per-chunk host<->device transfer budget of ``search``:
+    # queries in, merged ids out — everything between the shard search and
+    # the cross-shard merge stays on device.  ``with_stats=True`` adds two
+    # d2h crossings (hops, dist_comps).  The SPMD auditor (PIPS004) replays
+    # a search under ``core.transfers.ledger`` and gates against this.
+    TRANSFER_BUDGET = {"h2d": 1, "d2h": 1}
 
     # ------------------------------------------------------------- sizing --
     @property
@@ -147,6 +167,17 @@ class ShardedServingIndex:
     def axis(self) -> str:
         return self.mesh.axis_names[0]
 
+    def _shard_avals(self):
+        """ShapeDtypeStructs of ONE shard's points/scales slice — all the
+        kernel-path pricing reads.  ``self.points[0]`` would work too, but
+        an eager getitem on a mesh-sharded array dispatches a gather (with
+        an implicit scalar h2d for the index) on every search call."""
+        pts = jax.ShapeDtypeStruct(self.points.shape[1:], self.points.dtype)
+        scl = (None if self.scales is None else
+               jax.ShapeDtypeStruct(self.scales.shape[1:],
+                                    self.scales.dtype))
+        return pts, scl
+
     @property
     def kernel_path(self) -> str:
         """The distance-kernel path each shard auto-selects, judged on the
@@ -154,20 +185,73 @@ class ShardedServingIndex:
         the budget applies per device, not to the global index."""
         from repro.core import beam_search as _bs
 
-        return _bs.resolve_kernel_path(
-            self.points[0],
-            None if self.scales is None else self.scales[0],
-            vmem_budget=self.vmem_budget)
+        return _bs.resolve_kernel_path(*self._shard_avals(),
+                                       vmem_budget=self.vmem_budget)
 
-    def device_bytes(self, per_shard: bool = False) -> int:
+    def device_bytes(self, per_shard: bool = False,
+                     breakdown: bool = False):
         """Device-resident footprint: the full stacked packing, or (with
         ``per_shard=True``) ONE shard's slice — what a single device
-        actually holds under the mesh."""
+        actually holds under the mesh.  ``breakdown=True`` additionally
+        splits the row-indexed bytes into member / ghost / pad shares
+        (``halo_stats``) — the replication cost of the halo packing."""
         parts = (self.gids, self.graph, self.points, self.norms,
                  self.starts, self.leaders) + (
             () if self.scales is None else (self.scales,))
         total = sum(int(a.size) * a.dtype.itemsize for a in parts)
-        return total // self.n_shards if per_shard else total
+        total = total // self.n_shards if per_shard else total
+        if not breakdown:
+            return total
+        hs = self.halo_stats()
+        scale = 1.0 / self.n_shards if per_shard else 1.0
+        return {
+            "total": total,
+            "member_bytes": int(hs["member_bytes"].sum() * scale),
+            "ghost_bytes": int(hs["ghost_bytes"].sum() * scale),
+            "pad_bytes": int(hs["pad_bytes"].sum() * scale),
+            "halo_fraction": hs["halo_fraction"],
+        }
+
+    def halo_stats(self) -> dict[str, Any]:
+        """Member / ghost / pad row accounting per shard — the replication
+        cost of the GGNN-style 1-hop halo, and the measured data the SPMD
+        auditor's footprint model (PIPS003) prices against.
+
+        Returns per-shard int arrays ``members`` / ``ghosts`` / ``pads``
+        (rows: owned partition members, halo replicas, -1 padding up to
+        the stacked capacity ``m``), the matching ``*_bytes`` (at
+        ``row_bytes`` — the per-row cost across gids+graph+points+norms
+        [+scales]), and the scalar ``halo_fraction``: ghost rows' share
+        of all LIVE rows across the packing — 0.0 means no replication,
+        0.5 would mean every owned row is matched by a ghost copy."""
+        if self.owned is None:
+            raise ValueError(
+                "halo_stats needs the owned-row counts recorded by "
+                "from_graph; this packing was constructed without them")
+        gids = np.asarray(self.gids)
+        m = self.shard_capacity
+        members = np.asarray(self.owned, np.int64)
+        live = (gids >= 0).sum(axis=1).astype(np.int64)
+        ghosts = live - members
+        pads = m - live
+        r, d = self.graph.shape[2], self.points.shape[2]
+        row_bytes = (self.gids.dtype.itemsize
+                     + r * self.graph.dtype.itemsize
+                     + d * self.points.dtype.itemsize
+                     + self.norms.dtype.itemsize
+                     + (0 if self.scales is None
+                        else self.scales.dtype.itemsize))
+        total_live = max(int(live.sum()), 1)
+        return {
+            "members": members,
+            "ghosts": ghosts,
+            "pads": pads,
+            "row_bytes": int(row_bytes),
+            "member_bytes": members * row_bytes,
+            "ghost_bytes": ghosts * row_bytes,
+            "pad_bytes": pads * row_bytes,
+            "halo_fraction": float(ghosts.sum() / total_live),
+        }
 
     # ------------------------------------------------------------ packing --
     @classmethod
@@ -211,6 +295,11 @@ class ShardedServingIndex:
         if router not in ROUTERS:
             raise ValueError(f"router must be one of {ROUTERS}, "
                              f"got {router!r}")
+        if router == "leaders" and int(n_probes) <= 0:
+            # an empty probe set would mask EVERY shard out of the merge
+            # and return all -1 ids — fail loudly at packing time instead
+            raise ValueError(f"router='leaders' needs n_probes >= 1, "
+                             f"got {n_probes}")
         s = int(np.prod(mesh.devices.shape))
         x = np.ascontiguousarray(x, dtype=np.float32)
         graph = np.ascontiguousarray(graph, dtype=np.int32)
@@ -273,7 +362,6 @@ class ShardedServingIndex:
             pts_s[i, :c] = xp[ridx]
             if int8:
                 scales_np[i, :c] = scl[ridx]
-        scales_s = jnp.asarray(scales_np) if int8 else None
         pts_j = jnp.asarray(pts_s)
         if dtype is not None and not int8:
             pts_j = pts_j.astype(dtype)
@@ -285,16 +373,27 @@ class ShardedServingIndex:
             mem = rows[i][: owned[i]]
             if len(mem):
                 starts_local[i] = np.argmin(dstart[mem])
+        # commit every stacked array to its mesh placement NOW: shard-axis
+        # arrays split over the devices, router leaders replicated.  A
+        # plain jnp.asarray would land everything on device 0 and the jit
+        # dispatch of the shard_map program would reshard the ENTIRE
+        # packing device->devices on every single search call (an implicit
+        # transfer jax performs silently — PIPS004's reason to exist).
+        from jax.sharding import NamedSharding
+
+        shard = NamedSharding(mesh, P(mesh.axis_names[0]))
+        rep = NamedSharding(mesh, P())
         return cls(
-            gids=jnp.asarray(gids),
-            graph=jnp.asarray(graph_s),
-            points=pts_j,
-            norms=jnp.asarray(norms_s),
-            starts=jnp.asarray(starts_local),
-            leaders=jnp.asarray(leaders),
-            mesh=mesh, metric=metric, scales=scales_s,
+            gids=jax.device_put(gids, shard),
+            graph=jax.device_put(graph_s, shard),
+            points=jax.device_put(pts_j, shard),
+            norms=jax.device_put(norms_s, shard),
+            starts=jax.device_put(starts_local, shard),
+            leaders=jax.device_put(np.ascontiguousarray(leaders), rep),
+            mesh=mesh, metric=metric,
+            scales=(jax.device_put(scales_np, shard) if int8 else None),
             router=router, n_probes=int(n_probes), vmem_budget=vmem_budget,
-            n_points=n,
+            n_points=n, owned=owned.astype(np.int64),
         )
 
     @classmethod
@@ -345,6 +444,12 @@ class ShardedServingIndex:
         """[S, Q] bool — which shards serve which query (None: all)."""
         if self.router == "all":
             return None
+        if int(self.n_probes) <= 0:
+            # guard direct construction too: from_graph already rejects
+            # this, but an empty probe set silently masking every shard
+            # (all -1 results) must never reach the merge
+            raise ValueError(f"router='leaders' needs n_probes >= 1, "
+                             f"got {self.n_probes}")
         from repro.core.leader_assign import leader_assign
 
         probes = min(int(self.n_probes), self.n_shards)
@@ -352,6 +457,21 @@ class ShardedServingIndex:
                               metric=self.metric)          # [Q, probes]
         sids = jnp.arange(self.n_shards, dtype=probe.dtype)
         return jnp.any(probe[None, :, :] == sids[:, None, None], axis=2)
+
+    def _scales_operand(self) -> jax.Array:
+        """The scales argument of the shard_map program: the real [S, m]
+        scales (int8 packing) or a cached mesh-committed [S, 1] dummy the
+        f32 body ignores — rebuilt per call it would be a fresh implicit
+        h2d transfer on every search."""
+        if self.scales is not None:
+            return self.scales
+        if self._dummy_scales is None:
+            from jax.sharding import NamedSharding
+
+            self._dummy_scales = jax.device_put(
+                np.zeros((self.n_shards, 1), np.float32),
+                NamedSharding(self.mesh, P(self.axis)))
+        return self._dummy_scales
 
     def search(
         self,
@@ -364,25 +484,41 @@ class ShardedServingIndex:
         early_exit: bool = True,
         kernel_path: str | None = None,
         interpret: bool | None = None,
+        query_chunk: int | None = None,
         with_stats: bool = False,
     ):
         """Serve a query batch over the mesh; [Q, k] global ids (int64,
         -1-padded).  Semantics mirror ``ServingIndex.search``: per shard
         the multi-expansion beam search runs unchanged (``beam`` is the
         PER-SHARD beam width), then the ``router`` decides which shards'
-        beams enter the cross-shard top-k merge.  ``with_stats=True``
-        adds per-query telemetry summed over the shards that served the
-        query, plus the resolved kernel path and routing settings.
-        """
-        from repro.core import beam_search as _bs
+        beams enter the cross-shard top-k merge.  ``query_chunk`` bounds
+        the per-dispatch batch exactly like the single-device path: small
+        batches pad UP to the chunk so every dispatch reuses one compiled
+        shard_map program instead of compiling per distinct nq.
+        ``with_stats=True`` adds per-query telemetry summed over the
+        shards that served the query, plus the resolved kernel path,
+        routing settings and the packing's halo fraction.
 
+        Host traffic per chunk is exactly the declared
+        ``TRANSFER_BUDGET``: queries in (``core.transfers.to_device``,
+        committed replicated to the mesh), merged ids out
+        (``to_host``) — the per-shard beams and the cross-shard merge
+        never leave the devices.  ``with_stats`` adds the two telemetry
+        d2h crossings.
+        """
+        from jax.sharding import NamedSharding
+
+        from repro.core import beam_search as _bs
+        from repro.core.transfers import to_device, to_host
+
+        if query_chunk is not None and int(query_chunk) <= 0:
+            raise ValueError(f"query_chunk must be >= 1, got {query_chunk}")
         q = np.ascontiguousarray(queries, dtype=np.float32)
         nq = q.shape[0]
         iters_cap = int(iters if iters is not None
                         else _bs.default_iters(beam))
         path = _bs.resolve_kernel_path(
-            self.points[0],
-            None if self.scales is None else self.scales[0],
+            *self._shard_avals(),
             kernel_path=kernel_path, vmem_budget=self.vmem_budget)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -397,30 +533,44 @@ class ShardedServingIndex:
             beam=beam, iters=iters_cap, expansions=int(expansions),
             early_exit=bool(early_exit), kernel_path=path,
             interpret=bool(interpret))
-        scales = (self.scales if self.scales is not None
-                  else jnp.zeros((self.n_shards, 1), jnp.float32))
-        qj = jnp.asarray(q)
-        ids_s, ds_s, hops_s, comps_s = fn(
-            self.gids, self.graph, self.points, self.norms, self.starts,
-            scales, qj)                                    # [S, Q, B] / [S, Q]
-        active = self._route_mask(qj)
-        if active is not None:
-            ids_s = jnp.where(active[:, :, None], ids_s, -1)
-            ds_s = jnp.where(active[:, :, None], ds_s, jnp.inf)
-            hops_s = jnp.where(active, hops_s, 0)
-            comps_s = jnp.where(active, comps_s, 0)
-        ids, _ = cross_shard_topk(ids_s, ds_s, k=k)
-        out = _bs.pad_ids(np.asarray(ids), k).astype(np.int64)
+        scales = self._scales_operand()
+        replicated = NamedSharding(self.mesh, P())
+        chunk = int(query_chunk) if query_chunk else nq
+        ids_parts, hops_parts, comps_parts = [], [], []
+        for c0 in range(0, nq, chunk):
+            qc = q[c0 : c0 + chunk]
+            pad = chunk - qc.shape[0]
+            if pad:
+                qc = np.pad(qc, ((0, pad), (0, 0)))
+            qj = to_device(qc, replicated)
+            ids_s, ds_s, hops_s, comps_s = fn(
+                self.gids, self.graph, self.points, self.norms,
+                self.starts, scales, qj)               # [S, Q, B] / [S, Q]
+            active = self._route_mask(qj)
+            if active is not None:
+                ids_s = jnp.where(active[:, :, None], ids_s, -1)
+                ds_s = jnp.where(active[:, :, None], ds_s, jnp.inf)
+                hops_s = jnp.where(active, hops_s, 0)
+                comps_s = jnp.where(active, comps_s, 0)
+            ids, _ = cross_shard_topk(ids_s, ds_s, k=k)
+            take = chunk - pad
+            ids_parts.append(to_host(ids)[:take])
+            if with_stats:
+                hops_parts.append(to_host(
+                    jnp.sum(hops_s, axis=0, dtype=jnp.int32))[:take])
+                comps_parts.append(to_host(
+                    jnp.sum(comps_s, axis=0, dtype=jnp.int32))[:take])
+        out = _bs.pad_ids(np.concatenate(ids_parts, axis=0),
+                          k).astype(np.int64)
         if with_stats:
             return out, self._stats(
-                np.asarray(jnp.sum(hops_s, axis=0, dtype=jnp.int32)),
-                np.asarray(jnp.sum(comps_s, axis=0, dtype=jnp.int32)),
+                np.concatenate(hops_parts), np.concatenate(comps_parts),
                 expansions, iters_cap, path)
         return out
 
     def _stats(self, hops, comps, expansions, iters_cap, path
                ) -> dict[str, Any]:
-        return {
+        stats = {
             "hops": hops,
             "dist_comps": comps,
             "expansions": int(expansions),
@@ -429,3 +579,8 @@ class ShardedServingIndex:
             "n_shards": self.n_shards,
             "router": self.router,
         }
+        if self.router == "leaders":
+            stats["n_probes"] = min(int(self.n_probes), self.n_shards)
+        if self.owned is not None:
+            stats["halo_fraction"] = self.halo_stats()["halo_fraction"]
+        return stats

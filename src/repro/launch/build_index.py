@@ -362,6 +362,9 @@ def make_tile_step(mesh: Mesh, p: DistBuildParams):
                                   res.ids, res.hashes, res.dists)
         return Reservoir(ids, hs, ds), stats
 
+    # the raw shard_map program (flat args, no Reservoir wrapper) — what
+    # the SPMD auditor (analysis/spmd_audit.py) traces and lowers
+    tile_step.shard_step = step
     return tile_step
 
 

@@ -279,3 +279,140 @@ def test_pipnn_search_mesh_end_to_end(built):
     assert idx._serving is sv1                # cache hit on the same mesh
     with pytest.raises(ValueError):
         pipnn.search(idx, x, q, k=5, batch=False, mesh=mesh)
+
+
+# ------------------------------------------- halo stats / query chunking ---
+
+def test_halo_stats_one_device_mesh(built):
+    """S=1: no cross-shard edges, so zero ghosts and zero halo fraction;
+    members account for every point."""
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    hs = ssv.halo_stats()
+    assert int(hs["members"].sum()) == x.shape[0]
+    assert int(hs["ghosts"].sum()) == 0
+    assert hs["halo_fraction"] == 0.0
+    bd = ssv.device_bytes(breakdown=True)
+    assert bd["ghost_bytes"] == 0
+    assert bd["total"] == ssv.device_bytes()
+    _, stats = ssv.search(x[:4], k=5, with_stats=True)
+    assert stats["halo_fraction"] == 0.0
+
+
+@multidevice
+def test_halo_stats_accounting(built):
+    """S=4: members still partition the dataset exactly; ghosts are the
+    replicated neighborhood rows; member+ghost+pad == capacity per shard;
+    the byte breakdown sums to device_bytes."""
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(4))
+    hs = ssv.halo_stats()
+    assert int(hs["members"].sum()) == x.shape[0]
+    assert int(hs["ghosts"].sum()) > 0        # a real graph has halo
+    cap = ssv.shard_capacity
+    np.testing.assert_array_equal(
+        hs["members"] + hs["ghosts"] + hs["pads"], np.full(4, cap))
+    assert 0.0 < hs["halo_fraction"] < 1.0
+    bd = ssv.device_bytes(breakdown=True)
+    rows = bd["member_bytes"] + bd["ghost_bytes"] + bd["pad_bytes"]
+    # the breakdown covers the row-indexed arrays; starts/leaders ride
+    # on top of it in the total
+    assert 0 < rows <= bd["total"] == ssv.device_bytes()
+    assert bd["halo_fraction"] == hs["halo_fraction"]
+    _, stats = ssv.search(x[:4], k=5, with_stats=True)
+    assert stats["halo_fraction"] == hs["halo_fraction"]
+
+
+def test_sharded_query_chunk_parity(built):
+    """Chunked dispatch pads every batch to one shape: identical results,
+    and the jit cache stops growing with batch size."""
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    q = x[:13]
+    a = ssv.search(q, k=7, beam=16)
+    b = ssv.search(q, k=7, beam=16, query_chunk=4)
+    np.testing.assert_array_equal(a, b)
+    # stats survive chunking (concatenated per chunk, trimmed to nq)
+    c, stats = ssv.search(q, k=7, beam=16, query_chunk=5, with_stats=True)
+    np.testing.assert_array_equal(a, c)
+    assert stats["hops"].shape == (13,)
+    with pytest.raises(ValueError):
+        ssv.search(q, k=7, query_chunk=0)
+
+
+@multidevice
+def test_sharded_query_chunk_bounds_jit_cache(built):
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(4))
+    for nq in (1, 3, 7, 12):
+        ssv.search(x[:nq], k=5, beam=16, query_chunk=4)
+    sizes = [fn._cache_size() for fn in ssv._search_cache.values()]
+    assert sum(sizes) == 1, sizes
+
+
+# ------------------------------------------------- n_probes validation ---
+
+def test_leaders_router_rejects_nonpositive_probes(built):
+    idx, x = built
+    with pytest.raises(ValueError, match="n_probes"):
+        ServingIndex.from_index(idx, x, mesh=_mesh(1), router="leaders",
+                                n_probes=0)
+    with pytest.raises(ValueError, match="n_probes"):
+        ServingIndex.from_index(idx, x, mesh=_mesh(1), router="leaders",
+                                n_probes=-3)
+
+
+@multidevice
+@pytest.mark.parametrize("n_probes", [1, 4, 9])
+def test_leaders_router_probe_sweep(built, n_probes):
+    """n_probes in {1, S, >S}: every query is served by at least one
+    shard (no all-masked rows — the pre-PR-8 n_probes<=0 regression),
+    and >S clamps to S (== replicate-to-all results)."""
+    idx, x = built
+    rng = np.random.default_rng(11)
+    q = rng.standard_normal((24, x.shape[1])).astype(np.float32)
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(4), router="leaders",
+                                  n_probes=n_probes)
+    ids, stats = ssv.search(q, k=5, beam=24, with_stats=True)
+    assert stats["n_probes"] == min(n_probes, 4)
+    assert (ids[:, 0] >= 0).all(), "a query was masked from every shard"
+    if n_probes >= 4:
+        sall = ServingIndex.from_index(idx, x, mesh=_mesh(4))
+        np.testing.assert_array_equal(ids, sall.search(q, k=5, beam=24))
+
+
+# ------------------------------------------------- transfer discipline ---
+
+def test_sharded_search_no_implicit_transfers(built, no_implicit_transfers):
+    """The serving call under transfer_guard('disallow'): every host
+    crossing must be routed through the declared to_device/to_host
+    boundaries (the PIPS004 contract, enforced live)."""
+    from repro.core import transfers
+
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    q = x[:6]
+    expect = ssv.search(q, k=5, beam=16)          # compile outside guard
+    ssv.search(q, k=5, beam=16, with_stats=True)
+    with transfers.ledger() as counts, no_implicit_transfers():
+        got = ssv.search(q, k=5, beam=16)
+        np.testing.assert_array_equal(got, expect)
+        assert counts == ShardedServingIndex.TRANSFER_BUDGET
+        ssv.search(q, k=5, beam=16, with_stats=True)
+
+
+@multidevice
+def test_sharded_search_no_implicit_transfers_multidevice(
+        built, no_implicit_transfers):
+    """Same discipline on a real 4-shard mesh, int8 packing and chunked
+    batches included (chunking pays one h2d/d2h per chunk)."""
+    from repro.core import transfers
+
+    idx, x = built
+    for dtype in (None, "int8"):
+        ssv = ServingIndex.from_index(idx, x, mesh=_mesh(4), dtype=dtype)
+        q = x[:9]
+        ssv.search(q, k=5, beam=16, query_chunk=4)    # compile first
+        with transfers.ledger() as counts, no_implicit_transfers():
+            ssv.search(q, k=5, beam=16, query_chunk=4)
+        assert counts == {"h2d": 3, "d2h": 3}         # ceil(9/4) chunks
