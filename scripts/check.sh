@@ -36,6 +36,14 @@
 #    serving path (halo shards + shard_map search + cross-shard merge)
 #    must stay within 0.01 recall of single-device serving, f32 AND int8,
 #    and the S=1 mesh must match single-device ids exactly
+# 7. resilient serving-loop gate (8 forced host devices): Poisson smoke
+#    load must finish with zero timeouts and p99 under the deadline; the
+#    straggler drain must return bit-identical ids for converged queries
+#    AND beat single-phase latency for them; the Issue-9 fault drill
+#    (1 of 8 shards killed mid-run, 5% NaN queries, one straggling shard)
+#    must complete every request with zero unhandled errors, structured
+#    errors on exactly the poisoned rows, degraded recall >= 0.85x
+#    healthy, and the dead shard re-admitted by the probe loop
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -282,6 +290,59 @@ print(f"  int8: single={r1_8:.3f} sharded(S=8)={r8_8:.3f} "
       f"delta={r1_8 - r8_8:+.4f}")
 assert r8_8 >= r1_8 - 0.01, f"int8 sharded {r8_8:.3f} vs single {r1_8:.3f}"
 print("sharded serving smoke OK")
+EOF
+
+echo "== gate: resilient serving loop (faults, drain, SLO; 8 devices) =="
+# own process: the fault drill shards over 8 forced host devices
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+python - <<'EOF'
+import numpy as np
+
+from benchmarks.bench_serving_loop import (_build, fault_drill, poisson_load,
+                                           straggler_drain_ab)
+from repro.core.serving import ServingIndex
+
+# Poisson smoke: open-loop arrivals, per-request deadline. Zero timeouts
+# and p99 under the deadline — the continuous-batching loop keeps up.
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+q = x[rng.integers(0, 2000, 96)] + 0.01 * rng.standard_normal(
+    (96, 32)).astype(np.float32)
+sv = ServingIndex.from_index(_build(x), x)
+rec = poisson_load(sv, q.astype(np.float32), rate=300.0, seed=0,
+                   deadline_s=2.0, chunk=32)
+print(f"  poisson: served={rec['served']}/{rec['requests']} "
+      f"p99={rec['p99_ms']}ms timeouts={rec['timeout_rate']}")
+assert rec["served"] == rec["requests"], rec
+assert rec["timeout_rate"] == 0.0, rec
+assert rec["p99_ms"] <= 2000.0, rec
+
+# Straggler drain: converged queries must come back bit-identical to the
+# single-phase run AND measurably faster (the drain is real, not a
+# quality trade).
+rec = straggler_drain_ab()
+print(f"  drain: rerun={rec['stragglers_rerun']}/{rec['batch']} "
+      f"speedup={rec['drain_speedup']}x "
+      f"bit_identical={rec['drained_bit_identical']}")
+assert rec["drained_bit_identical"], rec
+assert rec["drain_speedup"] > 1.0, rec
+assert rec["stragglers_rerun"] < rec["batch"], rec
+
+# Issue-9 fault drill: 1/8 shards down mid-run + 5% NaN queries + one
+# straggling shard. Every request completes, poisoned rows (and only
+# those) get structured errors, degraded recall >= 0.85x healthy, and
+# the tombstoned shard is re-admitted once its probe succeeds.
+rec = fault_drill()
+print(f"  drill: completed={rec['completed']}/{rec['requests']} "
+      f"unhandled={rec['unhandled_errors']} "
+      f"degraded_ratio={rec['degraded_ratio']} "
+      f"readmitted={rec['shard_readmitted']}")
+assert rec["unhandled_errors"] == 0, rec
+assert rec["completed"] == rec["requests"], rec
+assert rec["errors_match_poisoned"], rec
+assert rec["degraded_ratio"] >= 0.85, rec
+assert rec["shard_readmitted"] == 1, rec
+print("serving loop gate OK")
 EOF
 
 echo "ALL CHECKS PASSED"

@@ -309,13 +309,18 @@ def _beam_search_multi(
     early_exit: bool,
     kernel_path: str,
     interpret: bool,
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Batched multi-expansion beam search core.
 
-    Returns (ids [Q, beam], dists [Q, beam], hops [Q], dist_comps [Q]).
-    ``hops`` counts vertices expanded, ``dist_comps`` distance evaluations
-    (including the entry point).  ``kernel_path`` selects the distance
-    block implementation ("vmem" | "hbm" | "xla" —
+    Returns (ids [Q, beam], dists [Q, beam], hops [Q], dist_comps [Q],
+    converged [Q]).  ``hops`` counts vertices expanded, ``dist_comps``
+    distance evaluations (including the entry point).  ``converged`` is
+    the loop's own per-query stop predicate evaluated on the FINAL state
+    (no live unvisited beam entry): True means the query reached its
+    fixed point — more iterations cannot change its beam — and False
+    means the ``iters`` backstop cut it off mid-walk (a straggler the
+    serving loop reruns with a larger cap).  ``kernel_path`` selects the
+    distance block implementation ("vmem" | "hbm" | "xla" —
     ``resolve_kernel_path``).  See ``beam_search_batch`` for semantics.
     """
     n, r = graph.shape
@@ -410,7 +415,11 @@ def _beam_search_multi(
 
     state = (jnp.int32(0), ids, ds, vis, hops, comps)
     _, ids, ds, vis, hops, comps = jax.lax.while_loop(cond, body, state)
-    return ids, ds, hops, comps
+    # the loop's own per-query stop predicate on the final state: a query
+    # with no live unvisited entry is at its fixed point, one cut off by
+    # the iters backstop is not (the straggler the serving loop redrives)
+    converged = ~jnp.any(~vis & (ids >= 0) & jnp.isfinite(ds), axis=1)
+    return ids, ds, hops, comps, converged
 
 
 def beam_search_batch(
@@ -457,7 +466,10 @@ def beam_search_batch(
     ``norms`` are the metric-dependent point norms
     (``metrics.point_norms``); pass the precomputed array to skip the
     per-call reduction (``ServingIndex`` does).  ``with_stats=True``
-    additionally returns per-query telemetry (hops, dist_comps).
+    additionally returns per-query telemetry (hops, dist_comps,
+    converged — the per-query stop predicate on the final state, False
+    when the ``iters`` backstop cut the walk off before its fixed
+    point).
 
     ``scales`` switches on the int8 scalar-quantized serving path: ``x``
     must then be the int8 packing (``ref.quantize_symmetric``) and
@@ -490,14 +502,14 @@ def beam_search_batch(
         interpret = jax.default_backend() != "tpu"
     if norms is None:
         norms = _metrics.point_norms(x, metric)
-    ids, ds, hops, comps = _beam_search_multi(
+    ids, ds, hops, comps, converged = _beam_search_multi(
         graph, x, jnp.asarray(norms), queries, start, scales,
         beam=beam, iters=int(iters), metric=metric,
         expansions=int(expansions), early_exit=bool(early_exit),
         kernel_path=path, interpret=bool(interpret),
     )
     if with_stats:
-        return ids, ds, hops, comps
+        return ids, ds, hops, comps, converged
     return ids, ds
 
 

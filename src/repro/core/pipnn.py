@@ -542,7 +542,9 @@ def search(
     build, and what the batched path amortizes away at query time).
     """
     from repro.core import beam_search as bs
+    from repro.core.validation import validate_queries, validate_search_params
 
+    validate_search_params(k=k, beam=beam)
     if batch:
         sv = serving_index(index, x, dtype=dtype, mesh=mesh)
         return sv.search(queries, k=k, beam=beam,
@@ -554,6 +556,7 @@ def search(
             "with_stats / iters / dtype / expansions / mesh are serving-"
             "path options; the batch=False np oracle expands one vertex "
             "per hop and does not support them")
+    queries = validate_queries(queries, dim=x.shape[1])
     out = np.empty((queries.shape[0], k), dtype=np.int64)
     for i, q in enumerate(queries):
         ids, _, _ = bs.beam_search_np(

@@ -233,15 +233,27 @@ class ServingIndex:
         executable).  ``kernel_path`` forces a distance-kernel path
         ("vmem" | "hbm" | "xla"; default: the index's auto-selection —
         see ``ServingIndex.kernel_path``).  ``with_stats=True`` also
-        returns a dict with per-query ``hops`` (vertices expanded) and
-        ``dist_comps`` (distance evaluations) telemetry, plus the
-        resolved ``kernel_path`` the batch actually served through.
+        returns a dict with per-query ``hops`` (vertices expanded),
+        ``dist_comps`` (distance evaluations) and ``converged`` (False
+        when the ``iters`` backstop cut the query off before its fixed
+        point — the straggler signal the serving loop's two-phase drain
+        keys on) telemetry, plus the resolved ``kernel_path`` the batch
+        actually served through.
+
+        Boundary validation: ``k``/``beam`` must be >= 1 (``ValueError``)
+        and queries must be a finite 2-D float batch of the index width —
+        NaN/Inf rows raise a structured
+        :class:`repro.core.validation.InvalidQueryError` naming the rows
+        instead of silently poisoning the batch's beams.
         """
         from repro.core import beam_search as _bs
+        from repro.core.validation import (validate_queries,
+                                           validate_search_params)
 
+        validate_search_params(k=k, beam=beam)
         if query_chunk is not None and int(query_chunk) <= 0:
             raise ValueError(f"query_chunk must be >= 1, got {query_chunk}")
-        q = np.ascontiguousarray(queries, dtype=np.float32)
+        q = validate_queries(queries, dim=int(self.points.shape[1]))
         nq = q.shape[0]
         iters_cap = int(iters if iters is not None
                         else _bs.default_iters(beam))
@@ -257,6 +269,7 @@ class ServingIndex:
                 return out, {
                     "hops": np.empty((0,), np.int32),
                     "dist_comps": np.empty((0,), np.int32),
+                    "converged": np.empty((0,), bool),
                     "expansions": int(expansions),
                     "iters_cap": iters_cap,
                     "kernel_path": path,
@@ -269,13 +282,13 @@ class ServingIndex:
         # each distinct small nq compiles its own engine variant
         chunk = int(query_chunk) if query_chunk else nq
         start_dev = self._start_operand()
-        ids_parts, hops_parts, comps_parts = [], [], []
+        ids_parts, hops_parts, comps_parts, conv_parts = [], [], [], []
         for s in range(0, nq, chunk):
             qc = q[s : s + chunk]
             pad = chunk - qc.shape[0]
             if pad:
                 qc = np.pad(qc, ((0, pad), (0, 0)))
-            ids, _, hops, comps = _bs.beam_search_batch(
+            ids, _, hops, comps, conv = _bs.beam_search_batch(
                 self.graph, self.points, to_device(qc),
                 start=start_dev, beam=beam, iters=iters, metric=self.metric,
                 expansions=expansions, norms=self.norms, scales=self.scales,
@@ -287,6 +300,7 @@ class ServingIndex:
             if with_stats:
                 hops_parts.append(to_host(hops)[:take])
                 comps_parts.append(to_host(comps)[:take])
+                conv_parts.append(to_host(conv)[:take])
         ids = np.concatenate(ids_parts, axis=0)
         # beam < k: -1-pad to [Q, k] like the np oracle path
         out = _bs.pad_ids(ids, k).astype(np.int64)
@@ -294,6 +308,7 @@ class ServingIndex:
             stats: dict[str, Any] = {
                 "hops": np.concatenate(hops_parts),
                 "dist_comps": np.concatenate(comps_parts),
+                "converged": np.concatenate(conv_parts).astype(bool),
                 "expansions": int(expansions),
                 "iters_cap": iters_cap,
                 "kernel_path": path,

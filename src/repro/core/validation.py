@@ -1,0 +1,93 @@
+"""Input hardening at the public serving boundary.
+
+The serving engines are fixed-shape jit programs: garbage that reaches
+them does not fail, it PROPAGATES.  A single NaN query row poisons every
+distance it touches (NaN compares false everywhere, so the beam silently
+fills with arbitrary ids), a ``k <= 0`` flows into ``lax.top_k`` and dies
+with an opaque XLA shape error three layers down, and a query matrix of
+the wrong width gathers out-of-range rows.  None of those should get past
+the boundary, and the error should say which REQUEST is at fault — under
+continuous batching one caller's garbage must never take down the other
+queries sharing its batch (the serving loop rejects the poisoned rows
+individually and serves the rest).
+
+``validate_queries`` / ``validate_search_params`` are shared by every
+public entry: ``pipnn.search``, ``ServingIndex.search``,
+``ShardedServingIndex.search`` and ``launch.serve.Retriever.retrieve``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class InvalidQueryError(ValueError):
+    """A query batch failed boundary validation.
+
+    ``rows`` lists the offending row indices (empty for batch-level
+    failures such as a wrong shape or a non-numeric dtype), ``reason``
+    is a machine-usable tag ("nan_inf" | "shape" | "dtype") — the
+    serving loop maps ``rows`` back to request ids and rejects exactly
+    those requests instead of the whole batch.
+    """
+
+    def __init__(self, message: str, *, rows=(), reason: str = "invalid"):
+        super().__init__(message)
+        self.rows = tuple(int(r) for r in rows)
+        self.reason = reason
+
+
+def nonfinite_rows(queries: np.ndarray) -> np.ndarray:
+    """Indices of rows containing any NaN/Inf entry (the poison check,
+    exposed separately so the serving loop can pre-screen per request)."""
+    q = np.asarray(queries)
+    bad = ~np.isfinite(q).all(axis=tuple(range(1, q.ndim)))
+    return np.nonzero(bad)[0]
+
+
+def validate_queries(queries, dim: int | None = None) -> np.ndarray:
+    """Validate a query batch at the serving boundary; returns the batch
+    as a C-contiguous float32 [Q, d] array.
+
+    Rejects with a structured :class:`InvalidQueryError`:
+      * non-numeric / non-castable dtypes (``reason="dtype"``),
+      * anything but a 2-D [Q, d] matrix, or a width mismatch against
+        the index's ``dim`` when given (``reason="shape"``),
+      * rows containing NaN/Inf (``reason="nan_inf"``, ``rows`` set) —
+        a NaN distance compares false against every beam entry and
+        silently corrupts the result instead of failing.
+    """
+    try:
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+    except (TypeError, ValueError) as e:
+        raise InvalidQueryError(
+            f"queries are not castable to float32: {e}",
+            reason="dtype") from e
+    if q.ndim != 2:
+        raise InvalidQueryError(
+            f"queries must be a 2-D [Q, d] batch, got shape {q.shape} "
+            f"(a single query is queries[None, :])", reason="shape")
+    if dim is not None and q.shape[0] and q.shape[1] != dim:
+        raise InvalidQueryError(
+            f"query width {q.shape[1]} does not match the index "
+            f"dimension {dim}", reason="shape")
+    rows = nonfinite_rows(q)
+    if rows.size:
+        head = ", ".join(str(r) for r in rows[:8])
+        more = "" if rows.size <= 8 else f", ... ({rows.size} total)"
+        raise InvalidQueryError(
+            f"query rows [{head}{more}] contain NaN/Inf — a non-finite "
+            f"query poisons every distance it touches; drop or fix the "
+            f"rows (InvalidQueryError.rows lists them)",
+            rows=rows, reason="nan_inf")
+    return q
+
+
+def validate_search_params(*, k: int, beam: int) -> None:
+    """``k`` / ``beam`` guards shared by every search entry: both flow
+    into ``lax.top_k`` / fixed-shape beam buffers, where a non-positive
+    value is an opaque XLA shape error (or an empty result) instead of
+    the obvious ValueError."""
+    if int(k) <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if int(beam) <= 0:
+        raise ValueError(f"beam must be >= 1, got {beam}")

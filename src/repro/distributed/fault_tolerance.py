@@ -80,6 +80,39 @@ class StepWatchdog:
         return is_straggler
 
 
+@dataclasses.dataclass
+class RollingPercentile:
+    """Rolling percentile over a bounded sample window.
+
+    The SLO signal of the serving loop's degradation controller
+    (``launch.serve_loop``): request latencies stream in through
+    ``record`` and the controller reads ``percentile(99)`` — same
+    bounded-window philosophy as ``StepWatchdog``, but measuring the
+    tail rather than flagging individual outliers."""
+
+    window: int = 256
+    _values: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
+
+    def __post_init__(self):
+        self._values = collections.deque(self._values,
+                                         maxlen=int(self.window))
+
+    def __len__(self) -> int:
+        return len(self._values)
+
+    def record(self, seconds: float) -> None:
+        self._values.append(float(seconds))
+
+    def percentile(self, pct: float = 99.0) -> float:
+        """Percentile over the current window (0.0 while empty — callers
+        gate on ``len() >= min_samples`` before acting on it)."""
+        if not self._values:
+            return 0.0
+        return float(np.percentile(np.fromiter(self._values, dtype=float),
+                                   pct))
+
+
 def resume_or_init(
     checkpointer, init_fn: Callable[[], Any], like_fn: Callable[[], Any]
 ) -> tuple[Any, int, dict]:

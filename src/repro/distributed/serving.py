@@ -60,6 +60,14 @@ from repro.distributed.compat import shard_map_norep
 ROUTERS = ("all", "leaders")
 
 
+class AllShardsDown(RuntimeError):
+    """Every shard is marked unhealthy — no result could be served.
+
+    The serving loop treats this as fail-stop (nothing left to degrade
+    to) rather than returning an all ``-1`` result that looks like an
+    empty index."""
+
+
 def _dist_to_point(x: np.ndarray, p: np.ndarray, metric: str) -> np.ndarray:
     """Host-side dissimilarity of every row of ``x`` to the single point
     ``p`` (entry-point selection; mirrors ``beam_search._dist_np``)."""
@@ -136,16 +144,22 @@ class ShardedServingIndex:
     vmem_budget: int | None = None
     n_points: int = 0         # dataset size (each point OWNED by 1 shard)
     owned: np.ndarray | None = None   # [S] owned (member) row counts
+    health: np.ndarray | None = None  # [S] bool shard health mask (None=all)
     _search_cache: dict = dataclasses.field(default_factory=dict,
                                             repr=False, compare=False)
     _dummy_scales: Any = dataclasses.field(default=None, repr=False,
                                            compare=False)
+    _health_dev: Any = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     # Declared per-chunk host<->device transfer budget of ``search``:
     # queries in, merged ids out — everything between the shard search and
-    # the cross-shard merge stays on device.  ``with_stats=True`` adds two
-    # d2h crossings (hops, dist_comps).  The SPMD auditor (PIPS004) replays
-    # a search under ``core.transfers.ledger`` and gates against this.
+    # the cross-shard merge stays on device.  ``with_stats=True`` adds
+    # three d2h crossings (hops, dist_comps, converged), and the first
+    # search after a health-mask change adds one h2d (the re-committed
+    # mask operand, cached until the next change).  The SPMD auditor
+    # (PIPS004) replays a steady-state search under
+    # ``core.transfers.ledger`` and gates against this.
     TRANSFER_BUDGET = {"h2d": 1, "d2h": 1}
 
     # ------------------------------------------------------------- sizing --
@@ -418,7 +432,7 @@ class ShardedServingIndex:
         int8 = self.scales is not None
 
         def body(gids, graph, points, norms, starts, scales, queries):
-            ids, ds, hops, comps = _beam_search_multi(
+            ids, ds, hops, comps, conv = _beam_search_multi(
                 graph[0], points[0], norms[0], queries, starts[0],
                 scales[0] if int8 else None,
                 beam=beam, iters=iters, metric=self.metric,
@@ -429,21 +443,107 @@ class ShardedServingIndex:
             # a pad entry point (empty shard) carries gid -1: push its
             # distance to +inf so the cross-shard merge drops it
             ds = jnp.where(gid >= 0, ds, jnp.inf)
-            return gid[None], ds[None], hops[None], comps[None]
+            return gid[None], ds[None], hops[None], comps[None], conv[None]
 
         p, rep = P(self.axis), P()
         sm = shard_map_norep(
             body, mesh=self.mesh,
             in_specs=(p, p, p, p, p, p, rep),
-            out_specs=(p, p, p, p))
+            out_specs=(p, p, p, p, p))
         fn = jax.jit(sm)
         self._search_cache[key] = fn
         return fn
 
-    def _route_mask(self, queries: jax.Array) -> jax.Array | None:
-        """[S, Q] bool — which shards serve which query (None: all)."""
+    # ------------------------------------------------------------- health --
+    def _health_np(self) -> np.ndarray:
+        """Host-side [S] bool shard health mask (lazily all-healthy)."""
+        if self.health is None:
+            self.health = np.ones(self.n_shards, dtype=bool)
+        return self.health
+
+    @property
+    def healthy_shards(self) -> int:
+        return int(self._health_np().sum())
+
+    @property
+    def down_shards(self) -> tuple[int, ...]:
+        """Indices of tombstoned shards (empty when fully healthy)."""
+        return tuple(int(i) for i in np.nonzero(~self._health_np())[0])
+
+    def mark_shard_down(self, shard: int) -> None:
+        """Tombstone a shard: its beams are masked out of every merge
+        (router="all") / its leader is never probed (router="leaders")
+        until :meth:`probe_shard` re-admits it.  The device mask operand
+        is rebuilt ONCE here, not per search call."""
+        h = self._health_np()
+        h[int(shard)] = False
+        self._health_dev = None
+
+    def mark_shard_up(self, shard: int) -> None:
+        h = self._health_np()
+        h[int(shard)] = True
+        self._health_dev = None
+
+    def probe_shard(self, shard: int, probe=None) -> bool:
+        """Attempt to re-admit a tombstoned shard.
+
+        The shard is optimistically marked up, then ``probe(shard)`` must
+        return truthy without raising; on failure the tombstone is
+        restored.  The default probe serves the shard's own leader vector
+        through ``search`` and checks a valid id comes back — under fault
+        injection (``repro.testing.faults``) that call raises while the
+        shard's outage is still scheduled, so probing naturally fails
+        until the fault clears.  Returns True iff the shard is healthy
+        after the call (idempotent on already-healthy shards)."""
+        i = int(shard)
+        if self._health_np()[i]:
+            return True
+        if probe is None:
+            probe = self._default_probe
+        self.mark_shard_up(i)
+        try:
+            ok = bool(probe(i))
+        except Exception:
+            ok = False
+        if not ok:
+            self.mark_shard_down(i)
+        return ok
+
+    def _default_probe(self, shard: int) -> bool:
+        q = np.asarray(self.leaders)[int(shard)][None, :]
+        ids = self.search(np.ascontiguousarray(q, np.float32), k=1, beam=4)
+        return bool(ids[0, 0] >= 0)
+
+    def _health_operand(self) -> jax.Array:
+        """Replicated device copy of the health mask, rebuilt only when
+        the mask changes (``mark_shard_down`` / ``mark_shard_up``) — built
+        per call it would be a fresh h2d transfer on every search, blowing
+        the PIPS004 budget."""
+        if self._health_dev is None:
+            from jax.sharding import NamedSharding
+
+            from repro.core.transfers import to_device
+
+            self._health_dev = to_device(
+                np.ascontiguousarray(self._health_np()),
+                NamedSharding(self.mesh, P()))
+        return self._health_dev
+
+    def _active_mask(self, queries: jax.Array) -> jax.Array | None:
+        """Bool mask ([S, Q] or a broadcastable [S, 1]) of which shards'
+        beams enter the merge for which query: the router's probe set
+        AND'd with the shard health mask.  ``None`` — the steady state:
+        router="all" with every shard healthy — skips masking entirely,
+        so healthy serving stays bit-identical to (and as transfer-lean
+        as) the pre-health code path."""
+        health = self._health_np()
+        if not health.any():
+            raise AllShardsDown(
+                f"all {self.n_shards} shards are marked down")
+        healthy = bool(health.all())
+        hdev = None if healthy else self._health_operand()
         if self.router == "all":
-            return None
+            return None if healthy else hdev[:, None]
         if int(self.n_probes) <= 0:
             # guard direct construction too: from_graph already rejects
             # this, but an empty probe set silently masking every shard
@@ -452,11 +552,16 @@ class ShardedServingIndex:
                              f"got {self.n_probes}")
         from repro.core.leader_assign import leader_assign
 
-        probes = min(int(self.n_probes), self.n_shards)
+        # a dead shard's leader is masked out of the probe distance
+        # matrix, so each query re-probes its next-best HEALTHY leaders
+        # instead of silently losing a probe slot
+        probes = min(int(self.n_probes), int(health.sum()))
         probe = leader_assign(queries, self.leaders, probes,
-                              metric=self.metric)          # [Q, probes]
+                              metric=self.metric,
+                              leader_valid=hdev)           # [Q, probes]
         sids = jnp.arange(self.n_shards, dtype=probe.dtype)
-        return jnp.any(probe[None, :, :] == sids[:, None, None], axis=2)
+        mask = jnp.any(probe[None, :, :] == sids[:, None, None], axis=2)
+        return mask if healthy else mask & hdev[:, None]
 
     def _scales_operand(self) -> jax.Array:
         """The scales argument of the shard_map program: the real [S, m]
@@ -499,21 +604,31 @@ class ShardedServingIndex:
         shards that served the query, plus the resolved kernel path,
         routing settings and the packing's halo fraction.
 
+        The boundary is hardened exactly like the single-device path:
+        ``k``/``beam`` must be >= 1 and NaN/Inf query rows raise a
+        structured ``InvalidQueryError`` (``core.validation``).  Shards
+        tombstoned by :meth:`mark_shard_down` are masked out of the merge
+        (router="all") or re-probed around (router="leaders"); when all
+        shards are down the call raises :class:`AllShardsDown`.
+
         Host traffic per chunk is exactly the declared
         ``TRANSFER_BUDGET``: queries in (``core.transfers.to_device``,
         committed replicated to the mesh), merged ids out
         (``to_host``) — the per-shard beams and the cross-shard merge
-        never leave the devices.  ``with_stats`` adds the two telemetry
-        d2h crossings.
+        never leave the devices.  ``with_stats`` adds the three telemetry
+        d2h crossings (hops, dist_comps, converged).
         """
         from jax.sharding import NamedSharding
 
         from repro.core import beam_search as _bs
         from repro.core.transfers import to_device, to_host
+        from repro.core.validation import (validate_queries,
+                                           validate_search_params)
 
         if query_chunk is not None and int(query_chunk) <= 0:
             raise ValueError(f"query_chunk must be >= 1, got {query_chunk}")
-        q = np.ascontiguousarray(queries, dtype=np.float32)
+        validate_search_params(k=k, beam=beam)
+        q = validate_queries(queries, dim=int(self.points.shape[-1]))
         nq = q.shape[0]
         iters_cap = int(iters if iters is not None
                         else _bs.default_iters(beam))
@@ -527,6 +642,7 @@ class ShardedServingIndex:
             if with_stats:
                 return out, self._stats(np.empty((0,), np.int32),
                                         np.empty((0,), np.int32),
+                                        np.empty((0,), bool),
                                         expansions, iters_cap, path)
             return out
         fn = self._sharded_search_fn(
@@ -536,22 +652,25 @@ class ShardedServingIndex:
         scales = self._scales_operand()
         replicated = NamedSharding(self.mesh, P())
         chunk = int(query_chunk) if query_chunk else nq
-        ids_parts, hops_parts, comps_parts = [], [], []
+        ids_parts, hops_parts, comps_parts, conv_parts = [], [], [], []
         for c0 in range(0, nq, chunk):
             qc = q[c0 : c0 + chunk]
             pad = chunk - qc.shape[0]
             if pad:
                 qc = np.pad(qc, ((0, pad), (0, 0)))
             qj = to_device(qc, replicated)
-            ids_s, ds_s, hops_s, comps_s = fn(
+            ids_s, ds_s, hops_s, comps_s, conv_s = fn(
                 self.gids, self.graph, self.points, self.norms,
                 self.starts, scales, qj)               # [S, Q, B] / [S, Q]
-            active = self._route_mask(qj)
+            active = self._active_mask(qj)
             if active is not None:
                 ids_s = jnp.where(active[:, :, None], ids_s, -1)
                 ds_s = jnp.where(active[:, :, None], ds_s, jnp.inf)
                 hops_s = jnp.where(active, hops_s, 0)
                 comps_s = jnp.where(active, comps_s, 0)
+                # a shard that did not serve the query cannot be its
+                # straggler: converged is the AND over ACTIVE shards only
+                conv_s = jnp.where(active, conv_s, True)
             ids, _ = cross_shard_topk(ids_s, ds_s, k=k)
             take = chunk - pad
             ids_parts.append(to_host(ids)[:take])
@@ -560,27 +679,32 @@ class ShardedServingIndex:
                     jnp.sum(hops_s, axis=0, dtype=jnp.int32))[:take])
                 comps_parts.append(to_host(
                     jnp.sum(comps_s, axis=0, dtype=jnp.int32))[:take])
+                conv_parts.append(to_host(
+                    jnp.all(conv_s, axis=0))[:take])
         out = _bs.pad_ids(np.concatenate(ids_parts, axis=0),
                           k).astype(np.int64)
         if with_stats:
             return out, self._stats(
                 np.concatenate(hops_parts), np.concatenate(comps_parts),
+                np.concatenate(conv_parts).astype(bool),
                 expansions, iters_cap, path)
         return out
 
-    def _stats(self, hops, comps, expansions, iters_cap, path
+    def _stats(self, hops, comps, converged, expansions, iters_cap, path
                ) -> dict[str, Any]:
         stats = {
             "hops": hops,
             "dist_comps": comps,
+            "converged": converged,
             "expansions": int(expansions),
             "iters_cap": int(iters_cap),
             "kernel_path": path,
             "n_shards": self.n_shards,
+            "healthy_shards": self.healthy_shards,
             "router": self.router,
         }
         if self.router == "leaders":
-            stats["n_probes"] = min(int(self.n_probes), self.n_shards)
+            stats["n_probes"] = min(int(self.n_probes), self.healthy_shards)
         if self.owned is not None:
             stats["halo_fraction"] = self.halo_stats()["halo_fraction"]
         return stats

@@ -99,9 +99,20 @@ class Retriever:
 
     def retrieve(self, q_emb: np.ndarray, *, k: int = 2,
                  beam: int = 32) -> np.ndarray:
-        """Top-k corpus ids [Q, k] for a query-embedding batch."""
-        return self.sv.search(np.asarray(q_emb, dtype=np.float32),
-                              k=k, beam=beam)
+        """Top-k corpus ids [Q, k] for a query-embedding batch.
+
+        The boundary is hardened: ``k``/``beam`` must be >= 1 and the
+        embeddings must be a finite 2-D float batch of the corpus width —
+        NaN/Inf rows raise a structured
+        :class:`repro.core.validation.InvalidQueryError` naming the rows
+        (an embedding-service glitch must never silently poison the
+        retrieval beams of the whole batch)."""
+        from repro.core.validation import (validate_queries,
+                                           validate_search_params)
+
+        validate_search_params(k=k, beam=beam)
+        q = validate_queries(q_emb, dim=int(self.sv.points.shape[-1]))
+        return self.sv.search(q, k=k, beam=beam)
 
     def device_bytes(self) -> int:
         return self.sv.device_bytes()

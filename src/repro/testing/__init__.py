@@ -1,0 +1,4 @@
+"""Test/bench support code that ships with the package (deterministic
+fault injection for serving-resilience drills) — importable from tests,
+benchmarks and the serving loop's examples without reaching into the
+test tree."""

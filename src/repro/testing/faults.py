@@ -1,0 +1,155 @@
+"""Deterministic fault injection for serving-resilience drills.
+
+Chaos testing with dice is unreproducible; this module injects the fault
+classes the resilient serving loop (``launch.serve_loop``) must survive
+on an exact, seedable SCHEDULE keyed to the search-call counter — the
+same drill replays bit-for-bit on every run, so the regression tests and
+``benchmarks/bench_serving_loop.py`` can assert outcomes, not
+probabilities:
+
+  * **Shard failure** — while a scheduled outage window is open, any
+    ``search`` that still counts the dead shard healthy raises
+    :class:`InjectedShardFailure` (the loop's cue to
+    ``mark_shard_down`` and retry); once the index has tombstoned the
+    shard, serving proceeds in degraded mode.  Probing the shard
+    (``probe_shard``) naturally fails until the window closes, then
+    succeeds — re-admission needs no extra plumbing.
+  * **Stragglers / timeouts** — scheduled calls sleep an injected extra
+    latency before running (a slow collective, a paging device), which
+    is what deadline propagation and the watchdog must absorb.
+  * **Poisoned payloads** — :func:`poison_queries` plants NaN/Inf rows
+    at deterministic positions; boundary validation must reject exactly
+    those rows without taking down batchmates.
+  * **Kernel-path fallback** — scheduled calls are forced DOWN the
+    kernel ladder (vmem -> hbm -> xla), the degraded-memory drill.
+
+``inject_faults`` patches the INSTANCE's ``search`` (the class and every
+other index stay untouched) and restores it on exit; the yielded
+:class:`FaultInjector` records an event log for assertions.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Mapping
+
+import numpy as np
+
+
+class InjectedShardFailure(RuntimeError):
+    """A scheduled-dead shard was reached while still counted healthy."""
+
+    def __init__(self, shard: int, call: int):
+        super().__init__(
+            f"injected failure: shard {shard} is down (search call "
+            f"{call}) and has not been tombstoned")
+        self.shard = int(shard)
+        self.call = int(call)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic fault schedule, keyed on the patched instance's
+    search-call counter (0-based; probes issued through the patched
+    ``search`` advance it too, so replays are exact).
+
+    ``shard_down`` maps a shard index to its outage window
+    ``(first_call, last_call)`` — half-open, ``None`` = forever.
+    ``straggle`` maps a call index to injected extra seconds of latency.
+    ``force_kernel_path`` maps a call index to the kernel path forced on
+    that call ("hbm" | "xla" — down the ladder only; forcing "vmem" on
+    an oversized shard would be a config error, not a fault).
+    """
+
+    shard_down: Mapping[int, tuple[int, int | None]] = \
+        dataclasses.field(default_factory=dict)
+    straggle: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    force_kernel_path: Mapping[int, str] = \
+        dataclasses.field(default_factory=dict)
+
+    def dead_shards(self, call: int) -> tuple[int, ...]:
+        """Shards whose outage window covers ``call``."""
+        out = []
+        for s, (a, b) in self.shard_down.items():
+            if int(a) <= call and (b is None or call < int(b)):
+                out.append(int(s))
+        return tuple(sorted(out))
+
+
+def poison_queries(queries: np.ndarray, frac: float = 0.05, *,
+                   seed: int = 0, value: float = np.nan
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Plant non-finite entries in a deterministic subset of query rows.
+
+    Returns ``(poisoned_copy, rows)`` — at least one row is poisoned
+    whenever ``frac > 0`` and the batch is non-empty, so a "5% NaN
+    queries" drill on a small batch cannot silently round to zero
+    faults.  ``value`` defaults to NaN; pass ``np.inf`` for the Inf
+    variant."""
+    q = np.array(queries, dtype=np.float32, copy=True)
+    nq = q.shape[0]
+    if nq == 0 or frac <= 0:
+        return q, np.empty((0,), np.int64)
+    n_bad = max(1, int(round(frac * nq)))
+    rng = np.random.default_rng(seed)
+    rows = np.sort(rng.choice(nq, size=min(n_bad, nq), replace=False))
+    q[rows, 0] = value
+    return q, rows.astype(np.int64)
+
+
+class FaultInjector:
+    """The live injector yielded by :func:`inject_faults`.
+
+    ``calls`` is the number of ``search`` calls intercepted so far;
+    ``events`` logs every injected fault as ``(kind, call, detail)``
+    tuples (kinds: "shard_failure", "straggle", "kernel_path") for
+    test assertions."""
+
+    def __init__(self, index: Any, plan: FaultPlan):
+        self.index = index
+        self.plan = plan
+        self.calls = 0
+        self.events: list[tuple[str, int, Any]] = []
+        self._orig_search = index.search
+
+    def _shard_is_trusted(self, shard: int) -> bool:
+        health = getattr(self.index, "_health_np", None)
+        if health is None:
+            return True     # single-device index: no tombstone to honor
+        return bool(health()[shard])
+
+    def search(self, queries, **kw):
+        call = self.calls
+        self.calls += 1
+        for s in self.plan.dead_shards(call):
+            if self._shard_is_trusted(s):
+                self.events.append(("shard_failure", call, s))
+                raise InjectedShardFailure(s, call)
+        delay = float(self.plan.straggle.get(call, 0.0))
+        if delay > 0:
+            self.events.append(("straggle", call, delay))
+            time.sleep(delay)
+        path = self.plan.force_kernel_path.get(call)
+        if path is not None:
+            self.events.append(("kernel_path", call, path))
+            kw["kernel_path"] = path
+        return self._orig_search(queries, **kw)
+
+
+@contextlib.contextmanager
+def inject_faults(index, plan: FaultPlan):
+    """Run ``index`` under the fault schedule ``plan``.
+
+    Patches the instance's ``search`` attribute (shadowing the class
+    method for THIS object only) and always restores it on exit —
+    including when the block exits via an injected exception."""
+    injector = FaultInjector(index, plan)
+    object.__setattr__(index, "search", injector.search)
+    try:
+        yield injector
+    finally:
+        try:
+            object.__delattr__(index, "search")
+        except AttributeError:
+            pass

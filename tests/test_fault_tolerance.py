@@ -1,0 +1,118 @@
+"""Seed fault-tolerance primitives: RunGuard signal handling,
+StepWatchdog sigma-flagging on synthetic latency traces, and the
+RollingPercentile SLO signal the serving loop's degradation controller
+reads."""
+import signal
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import (RollingPercentile, RunGuard,
+                                               StepWatchdog)
+
+
+# ---------------------------------------------------------------- RunGuard --
+
+def test_runguard_installs_and_restores_handlers():
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    guard = RunGuard()
+    assert signal.getsignal(signal.SIGTERM) == guard._handler
+    assert signal.getsignal(signal.SIGINT) == guard._handler
+    guard.restore_handlers()
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+    assert signal.getsignal(signal.SIGINT) == prev_int
+
+
+def test_runguard_sigterm_flips_should_stop():
+    guard = RunGuard()
+    try:
+        assert not guard.should_stop
+        signal.raise_signal(signal.SIGTERM)
+        assert guard.should_stop
+    finally:
+        guard.restore_handlers()
+
+
+def test_runguard_double_sigterm_is_idempotent():
+    """A second SIGTERM (the scheduler re-sending before the step
+    boundary) must not crash or un-set the stop request."""
+    guard = RunGuard()
+    try:
+        signal.raise_signal(signal.SIGTERM)
+        signal.raise_signal(signal.SIGTERM)
+        assert guard.should_stop
+    finally:
+        guard.restore_handlers()
+
+
+def test_runguard_no_install_leaves_signals_alone():
+    prev = signal.getsignal(signal.SIGTERM)
+    guard = RunGuard(install_handlers=False)
+    assert signal.getsignal(signal.SIGTERM) == prev
+    assert not guard.should_stop
+    guard.restore_handlers()    # no-op, nothing recorded
+
+
+# ------------------------------------------------------------ StepWatchdog --
+
+def test_watchdog_flags_straggler_on_synthetic_trace():
+    seen = []
+    wd = StepWatchdog(sigma=4.0, min_samples=10,
+                      on_straggler=lambda s, t, mu: seen.append((s, t, mu)))
+    rng = np.random.default_rng(0)
+    base = 1.0 + 0.01 * rng.standard_normal(30)
+    for i, t in enumerate(base):
+        assert not wd.record(i, float(t))
+    assert wd.record(30, 2.5)           # 2.5x the mean: a straggler
+    assert wd.flagged and wd.flagged[-1][0] == 30
+    assert seen and seen[0][0] == 30 and seen[0][1] == 2.5
+    assert seen[0][2] == pytest.approx(1.0, abs=0.05)
+
+
+def test_watchdog_respects_min_samples():
+    wd = StepWatchdog(min_samples=10)
+    for i in range(9):
+        wd.record(i, 0.001)
+    # 9 samples recorded: still warming up, even an absurd outlier passes
+    assert not wd.record(9, 100.0)
+
+
+def test_watchdog_sigma_and_ratio_must_both_trip():
+    """High variance trace: a step above 1.5x the mean but within sigma
+    is NOT flagged (and vice versa) — both conditions gate."""
+    wd = StepWatchdog(sigma=4.0, min_samples=10)
+    trace = [1.0, 2.0] * 10            # mu ~ 1.5, sd ~ 0.5
+    for i, t in enumerate(trace):
+        wd.record(i, t)
+    assert not wd.record(99, 3.0)      # 2x mean (ratio trips) but ~3 sigma
+    assert wd.record(100, 4.0)         # ~4+ sigma AND > 1.5x mean
+
+
+# ------------------------------------------------------- RollingPercentile --
+
+def test_rolling_percentile_matches_numpy():
+    rp = RollingPercentile(window=128)
+    rng = np.random.default_rng(1)
+    xs = rng.exponential(0.05, size=100)
+    for x in xs:
+        rp.record(float(x))
+    assert len(rp) == 100
+    assert rp.percentile(99) == pytest.approx(
+        float(np.percentile(xs, 99)), rel=1e-9)
+    assert rp.percentile(50) == pytest.approx(
+        float(np.percentile(xs, 50)), rel=1e-9)
+
+
+def test_rolling_percentile_window_bounds_memory():
+    rp = RollingPercentile(window=16)
+    for i in range(100):
+        rp.record(float(i))
+    assert len(rp) == 16
+    # only the last 16 samples (84..99) remain in the window
+    assert rp.percentile(0) == 84.0
+    assert rp.percentile(100) == 99.0
+
+
+def test_rolling_percentile_empty_is_zero():
+    assert RollingPercentile().percentile(99) == 0.0

@@ -141,7 +141,7 @@ def test_disconnected_start_region_early_exit():
     for i in range(5, n):       # a second, unreachable cycle
         graph[i] = [(i + 1 - 5) % (n - 5) + 5, -1]
     q = _grid_points(6, d, seed=10)
-    ids, ds, hops, comps = beam_search_batch(
+    ids, ds, hops, comps, _ = beam_search_batch(
         graph, x, q, start=0, beam=16, expansions=2, with_stats=True)
     ids = np.asarray(ids)
     assert set(ids[0][ids[0] >= 0].tolist()) == set(comp)
@@ -174,7 +174,7 @@ def test_telemetry_counts():
     truth = brute_force_knn(x, x, 9)
     graph = truth[:, 1:9].astype(np.int32)
     q = rng.standard_normal((6, 8)).astype(np.float32)
-    ids, ds, hops, comps = beam_search_batch(
+    ids, ds, hops, comps, _ = beam_search_batch(
         graph, x, q, start=medoid(x), beam=12, expansions=4, with_stats=True)
     hops, comps = np.asarray(hops), np.asarray(comps)
     assert (hops >= 1).all() and (hops <= (12 + 4) * 4).all()  # cap * E
@@ -674,3 +674,66 @@ def test_resolve_kernel_path_legacy_use_pallas_mapping():
                                        use_pallas=False) == forced
     with pytest.raises(ValueError):
         resolve_kernel_path(x, kernel_path="dma")
+
+
+# ----------------------------------------------------- boundary hardening ---
+
+def test_search_guards_nonpositive_k_and_beam(built):
+    """k/beam <= 0 must be a clear ValueError at the boundary, not an
+    opaque XLA shape error three layers down (Issue 9)."""
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        sv.search(x[:2], k=0)
+    with pytest.raises(ValueError, match="beam must be >= 1"):
+        sv.search(x[:2], k=5, beam=0)
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        pipnn.search(idx, x, x[:2], k=-3)
+    with pytest.raises(ValueError, match="beam must be >= 1"):
+        pipnn.search(idx, x, x[:2], k=5, beam=-1, batch=False)
+
+
+def test_search_rejects_nan_inf_rows_with_row_list(built):
+    from repro.core.validation import InvalidQueryError
+
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    q = np.array(x[:5])
+    q[1, 0] = np.nan
+    q[3, 2] = np.inf
+    with pytest.raises(InvalidQueryError) as ei:
+        sv.search(q, k=5)
+    assert ei.value.reason == "nan_inf"
+    assert ei.value.rows == (1, 3)
+    # clean rows of the same batch serve fine once the poison is dropped
+    ok = sv.search(np.delete(q, [1, 3], axis=0), k=5)
+    assert (ok[:, 0] >= 0).all()
+
+
+def test_search_rejects_bad_shapes_and_width(built):
+    from repro.core.validation import InvalidQueryError
+
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    with pytest.raises(InvalidQueryError, match=r"2-D"):
+        sv.search(x[0], k=5)                      # 1-D single query
+    with pytest.raises(InvalidQueryError, match="width"):
+        sv.search(x[:3, :7], k=5)                 # wrong dimension
+    with pytest.raises(InvalidQueryError, match="castable"):
+        pipnn.search(idx, x, np.array([["a", "b"]]), k=5, batch=False)
+
+
+def test_converged_telemetry(built):
+    """with_stats exposes per-query convergence — the straggler signal
+    the two-phase serving loop drains on: True at a generous cap, False
+    when the iters backstop cuts the walk off early."""
+    idx, x = built
+    sv = ServingIndex.from_index(idx, x)
+    _, stats = sv.search(x[:6], k=5, beam=16, with_stats=True)
+    conv = stats["converged"]
+    assert conv.shape == (6,) and conv.dtype == bool
+    assert conv.all()                 # default cap: every query converges
+    ids1, stats1 = sv.search(x[:6], k=5, beam=16, iters=1, with_stats=True)
+    assert not stats1["converged"].any()
+    # the backstop-capped ids are still a valid (if unconverged) beam
+    assert (np.asarray(ids1)[:, 0] >= 0).all()

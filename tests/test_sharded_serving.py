@@ -416,3 +416,69 @@ def test_sharded_search_no_implicit_transfers_multidevice(
         with transfers.ledger() as counts, no_implicit_transfers():
             ssv.search(q, k=5, beam=16, query_chunk=4)
         assert counts == {"h2d": 3, "d2h": 3}         # ceil(9/4) chunks
+
+
+# ----------------------------------------------------- boundary hardening ---
+
+def test_sharded_search_guards_k_beam_and_nan(built):
+    """The sharded entry shares the single-device boundary validation:
+    non-positive k/beam and NaN/Inf rows fail fast and structured, before
+    anything is dispatched to the mesh."""
+    from repro.core.validation import InvalidQueryError
+
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        ssv.search(x[:2], k=0)
+    with pytest.raises(ValueError, match="beam must be >= 1"):
+        ssv.search(x[:2], k=5, beam=-2)
+    q = np.array(x[:3])
+    q[2, 1] = np.inf
+    with pytest.raises(InvalidQueryError) as ei:
+        ssv.search(q, k=5)
+    assert ei.value.reason == "nan_inf" and ei.value.rows == (2,)
+
+
+def test_all_shards_down_raises(built):
+    from repro.distributed.serving import AllShardsDown
+
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    ssv.mark_shard_down(0)
+    with pytest.raises(AllShardsDown):
+        ssv.search(x[:2], k=5)
+    # probing re-admits immediately: no fault harness, so the default
+    # probe (serve the shard's own leader) succeeds on the first try
+    assert ssv.probe_shard(0)
+    assert not ssv.down_shards
+    assert (np.asarray(ssv.search(x[:2], k=5))[:, 0] >= 0).all()
+
+
+def test_probe_shard_failure_keeps_tombstone(built):
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    ssv.mark_shard_down(0)
+    assert not ssv.probe_shard(0, probe=lambda s: False)
+    assert ssv.down_shards == (0,)
+    calls = []
+
+    def raising_probe(s):
+        calls.append(s)
+        raise RuntimeError("still dead")
+
+    assert not ssv.probe_shard(0, probe=raising_probe)
+    assert calls == [0] and ssv.down_shards == (0,)
+    assert ssv.probe_shard(0, probe=lambda s: True)
+    assert ssv.healthy_shards == 1
+
+
+def test_sharded_converged_telemetry(built):
+    idx, x = built
+    ssv = ServingIndex.from_index(idx, x, mesh=_mesh(1))
+    _, stats = ssv.search(x[:5], k=5, beam=16, with_stats=True)
+    conv = stats["converged"]
+    assert conv.shape == (5,) and conv.dtype == bool
+    assert conv.all()
+    _, stats1 = ssv.search(x[:5], k=5, beam=16, iters=1, with_stats=True)
+    assert not stats1["converged"].any()
+    assert stats["healthy_shards"] == 1
