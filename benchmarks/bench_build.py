@@ -7,11 +7,15 @@ the same algorithms (beam-search construction), so the *ratio* reproduces
 the search-bottleneck argument even though absolute times are CPU-scale.
 
 Also measures the streaming device-resident build vs the O(E) flat oracle
-(wall time + peak candidate-edge bytes) and appends the rows to
-``BENCH_build.json`` at the repo root so the perf trajectory is tracked
-across PRs.
+(wall time + peak candidate-edge bytes), records each registered build
+program's AOT-compiled peak device bytes next to the memory auditor's
+model-priced prediction (the PIPM004 contract, made visible as a bench
+series), and appends the rows to ``BENCH_build.json`` at the repo root so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from benchmarks.common import (Row, append_bench_json, dataset, graph_recall,
                                ground_truth, timed)
@@ -102,5 +106,40 @@ def run() -> list[Row]:
                      f"recall={r:.3f} speedup_vs_vamana={speedup:.2f}x "
                      f"deg={float((graph >= 0).sum(1).mean()):.1f}"))
         records.append({"variant": name, "wall_s": secs, "recall": r})
+    rows += _aot_peak_rows(records)
     append_bench_json(records, bench="build", n=N, d=D, max_deg=MAX_DEG)
+    return rows
+
+
+def _aot_peak_rows(records: list[dict]) -> list[Row]:
+    """Measured AOT peak device bytes per registered build program at its
+    canonical lattice point, next to the auditor's model-priced prediction
+    (exact avals + workspace model — what PIPM003 extrapolates from)."""
+    from repro.analysis import memory_audit as ma
+
+    if not ma.ledger_available():
+        return [("build/aot_peak", 0.0, "skipped: no compiled byte ledger")]
+    rows: list[Row] = []
+    for spec in ma.default_specs():
+        if spec.kind != "build":
+            continue
+        ledger, _ = ma.measure(spec, spec.base)
+        pred = ma.price_envelope(dataclasses.replace(spec,
+                                                     envelope=dict(spec.base),
+                                                     envelope_pricer=None))
+        ratio = ledger["peak"] / max(pred["total"], 1)
+        rows.append((
+            f"build/aot_peak_{spec.name}", ledger["peak"],
+            f"measured_peak_bytes={int(ledger['peak'])} "
+            f"predicted_bytes={pred['total']} ratio={ratio:.2f} "
+            f"temp_bytes={int(ledger['temp_size_in_bytes'])} "
+            f"workspace_model_bytes={pred['workspace_bytes']}"))
+        records.append({
+            "variant": f"aot_{spec.name}", "point": dict(spec.base),
+            "measured_peak_bytes": int(ledger["peak"]),
+            "measured_temp_bytes": int(ledger["temp_size_in_bytes"]),
+            "predicted_peak_bytes": int(pred["total"]),
+            "workspace_model_bytes": int(pred["workspace_bytes"]),
+            "measured_over_predicted": round(ratio, 3),
+        })
     return rows

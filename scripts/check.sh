@@ -11,6 +11,12 @@
 #    process under 8 forced host devices: collective whitelist,
 #    replication audit, halo/HBM footprint pricing, host-transfer
 #    budget, mesh-shape stability (PIPS001-005)
+# 0c. runs the memory-bound auditor (lint --pass memory) in its own
+#    process under 8 forced host devices: AOT-compiled byte ledgers over
+#    a shape lattice per registered program — scaling-exponent bounds,
+#    donation crediting, workspace models, BigANN-1B envelope pricing
+#    against PIPNN_DEVICE_HBM_BUDGET, and the memory_envelope.json
+#    regression gate (PIPM001-006)
 # 1. runs the tier-1 test command (PYTHONPATH=src python -m pytest -x -q)
 # 2. re-runs the partition-invariant + degenerate-data regression suite
 #    standalone (fast; it is also part of tier-1)
@@ -73,6 +79,19 @@ if ! XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=
   echo "SPMD audit FAILED: a shard_map program broke its declared"
   echo "sharding contract (PIPS001-005; see README 'Static analysis')."
   echo "Contracts are registered in src/repro/analysis/spmd_audit.py."
+  exit 1
+fi
+
+echo "== memory-bound auditor (lint --pass memory, 8 simulated devices) =="
+# separate process: forced devices give the sharded-search program a
+# real mesh for its compiled byte ledger; everything else is per-device
+if ! XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+     python -m repro.analysis.lint --pass memory; then
+  echo ""
+  echo "memory audit FAILED: a hot-path program broke its bounded-memory"
+  echo "contract (PIPM001-006; see README 'Static analysis'). After an"
+  echo "INTENTIONAL memory change, regenerate the envelope with:"
+  echo "  python -m repro.analysis.memory_audit --write-envelope"
   exit 1
 fi
 

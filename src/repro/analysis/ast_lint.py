@@ -358,10 +358,34 @@ def lint_source(src: str, path: str) -> list[Finding]:
     return findings
 
 
+# Template scaffolding retained ONLY because the tier-1 test suite imports
+# it (model zoo, arch configs, train/serve launchers); it is not part of
+# the audited PiPNN surface, so the analysis walks skip it.  Everything the
+# suite does NOT import has been deleted outright — quarantine here is the
+# fallback, not the default.
+TEMPLATE_QUARANTINE = (
+    "repro/models/",
+    "repro/configs/",
+    "repro/optim/",
+    "repro/launch/steps.py",
+    "repro/launch/train.py",
+    "repro/launch/serve.py",
+)
+
+
+def quarantined(rel_path: str) -> bool:
+    """True when ``rel_path`` (posix, relative to src/) is template
+    scaffolding excluded from the PiPNN analysis surface."""
+    rel = rel_path.split("src/", 1)[-1]
+    return any(rel.startswith(q) for q in TEMPLATE_QUARANTINE)
+
+
 def lint_package(pkg: pathlib.Path,
-                 root: pathlib.Path | None = None) -> list[Finding]:
+                 root: pathlib.Path | None = None,
+                 exclude_quarantine: bool = True) -> list[Finding]:
     """Lint every ``.py`` under ``pkg``; paths in findings are relative to
-    ``root`` (defaults to ``pkg``'s parent)."""
+    ``root`` (defaults to ``pkg``'s parent).  ``exclude_quarantine``
+    skips the retained template subtrees (``TEMPLATE_QUARANTINE``)."""
     pkg = pathlib.Path(pkg)
     base = pathlib.Path(root) if root is not None else pkg.parent
     findings: list[Finding] = []
@@ -369,5 +393,7 @@ def lint_package(pkg: pathlib.Path,
         if "__pycache__" in py.parts:
             continue
         rel = py.relative_to(base).as_posix()
+        if exclude_quarantine and quarantined(rel):
+            continue
         findings += lint_source(py.read_text(), rel)
     return findings

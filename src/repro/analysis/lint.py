@@ -1,7 +1,7 @@
 """``python -m repro.analysis.lint`` — the static contract checker CLI.
 
-Runs the four analysis passes (AST lint, kernel contracts, jaxpr audit,
-SPMD sharding audit) and reports findings as
+Runs the five analysis passes (AST lint, kernel contracts, jaxpr audit,
+SPMD sharding audit, memory-bound audit) and reports findings as
 ``file:line: RULE [symbol] message``.  Exit code
 is 0 iff every finding is covered by the baseline file — which is checked
 in EMPTY and expected to stay that way: pre-existing violations get fixed,
@@ -64,9 +64,27 @@ RULES: dict[str, str] = {
                "declared to_device/to_host budget",
     "PIPS005": "traced program structure differs across shard counts "
                "(shard count leaked into Python control flow)",
+    # memory-bound auditor (repro.analysis.memory_audit)
+    "PIPM001": "peak compiled bytes scale past the declared per-parameter "
+               "exponent bound (bounded-memory contract: build programs "
+               "may never scale with the emitted edge count E)",
+    "PIPM002": "donated argument bytes not credited as aliased in the "
+               "compiled byte ledger (donation declared but not "
+               "realized in allocation)",
+    "PIPM003": "program priced at the BigANN-1B per-shard envelope "
+               "exceeds the per-device HBM budget "
+               "(PIPNN_DEVICE_HBM_BUDGET)",
+    "PIPM004": "measured temp bytes exceed the program's declared "
+               "workspace model x tolerance (hidden upcast/remat/gather "
+               "blowup)",
+    "PIPM005": "canonical-point peak bytes regressed >10% over the "
+               "checked-in memory_envelope.json",
+    "PIPM006": "registered program missing a complete envelope record "
+               "(ledger + exponents + envelope price + roofline) — "
+               "regenerate with --write-envelope",
 }
 
-PASSES = ("ast", "kernels", "jaxpr", "spmd")
+PASSES = ("ast", "kernels", "jaxpr", "spmd", "memory")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +148,10 @@ def run_all(root: pathlib.Path | None = None,
         from repro.analysis import spmd_audit
 
         findings += spmd_audit.audit_all()
+    if "memory" in passes:
+        from repro.analysis import memory_audit
+
+        findings += memory_audit.audit_all()
     return findings
 
 
@@ -153,8 +175,8 @@ def _force_host_devices(n: int = 8) -> None:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="PiPNN static contract checker (kernel contracts, "
-                    "jaxpr audit, AST lint)")
+        description="PiPNN static contract checker (AST lint, kernel "
+                    "contracts, jaxpr audit, SPMD audit, memory audit)")
     ap.add_argument("--pass", dest="passes", action="append",
                     choices=PASSES, default=None,
                     help="run only this pass (repeatable; default: all)")
@@ -178,7 +200,9 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     passes = tuple(args.passes) if args.passes else PASSES
-    if "spmd" in passes:
+    if "spmd" in passes or "memory" in passes:
+        # both passes want a real mesh: spmd for the shard-count sweep,
+        # memory for the sharded-search program's ledger
         _force_host_devices()
     findings = run_all(passes=passes)
 

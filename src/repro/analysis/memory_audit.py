@@ -1,0 +1,751 @@
+"""Memory-bound auditor over the registered hot-path programs — PIPM001-006.
+
+The paper's central serving/build claim is *bounded memory*: HashPrune
+streams an unbounded candidate-edge set through an [n, l_max] reservoir, so
+no build program's peak device bytes may scale with the total emitted edge
+count E, and every program must fit the per-device HBM budget at the
+BigANN-1B deployment envelope.  This pass PROVES that at compile time: every
+jitted hot-path program is lowered and compiled AOT across a small
+shape-sweep lattice, the compiled byte ledger (``compiled.memory_analysis()``
+— argument / output / temp / donation-alias bytes) is pulled per point, and
+the measurements are checked against declared scaling bounds, workspace
+models and the checked-in envelope.
+
+Registered programs (one ``MemSpec`` each):
+
+  * the streaming build chunk step (``pipnn._make_stream_step``),
+  * the reservoir folds (``hashprune._merge_segmented_jit`` / ``_merge_flat_jit``),
+  * the final-prune chunk step (``robust_prune._final_prune_step``),
+  * the static two-level carve (``rbc._make_static_carve``),
+  * the serving engine (``beam_search._beam_search_multi``, f32 and int8),
+  * the ServeLoop straggler rerun (same engine, backstop statics),
+  * the cross-shard merge (``distributed.serving.cross_shard_topk``),
+  * the sharded search body (multi-device hosts only).
+
+Rules:
+
+  PIPM001  peak bytes at a lattice point fit a log-log scaling exponent per
+           swept parameter; an exponent over the spec's declared bound means
+           the program's memory grows faster than the bounded-memory
+           contract allows (for build programs: peak must be a function of
+           the chunk and reservoir shapes only — NEVER of the total edge
+           count E, whose boundedness follows from the per-parameter
+           bounds).
+  PIPM002  buffer donation must be credited in the byte ledger: the
+           compiled ``alias_size_in_bytes`` must cover the donated argument
+           bytes (complements the structural PIPJ003 — this checks the
+           LEDGER, not the lowering annotation).
+  PIPM003  the program priced at the BigANN-1B per-shard envelope (exact
+           aval bytes at the envelope shapes + the validated workspace
+           model) must fit ``PIPNN_DEVICE_HBM_BUDGET``
+           (``kernels.tiling.hbm_budget`` — single-sourced with PIPS003 and
+           the roofline fits-HBM bit).
+  PIPM004  measured temp bytes at every lattice point must stay within the
+           program's declared workspace model x tolerance — catches hidden
+           f32 upcasts, rematerialized gathers and fusion regressions that
+           keep peak *scaling* intact but blow the constant.
+  PIPM005  the checked-in ``memory_envelope.json`` baselines the canonical-
+           point peak per program; >10% regression fails (CI gate).
+  PIPM006  every registered program must have a complete envelope record —
+           ledger, exponents, envelope price and the three-term v5e
+           roofline (``roofline.analyze_compiled``, including collective
+           wire bytes for sharded programs).  Regenerate with
+           ``python -m repro.analysis.memory_audit --write-envelope``.
+
+Gracefully skips (stderr report, zero findings) when the backend's
+``memory_analysis()`` is unavailable or returns an empty ledger.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import math
+import pathlib
+import sys
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+ENVELOPE_PATH = pathlib.Path(__file__).resolve().parent / "memory_envelope.json"
+ENVELOPE_TOL = 0.10        # PIPM005: allowed canonical-peak growth
+WORKSPACE_TOL = 2.0        # PIPM004: model x tol upper bound on temp
+WORKSPACE_SLACK = 2 << 20  # PIPM004: absolute slack for tiny-shape constants
+DEFAULT_EXPONENT_BOUND = 1.15
+SWEEP_FACTORS = (1, 2, 4)
+
+# BigANN-1B deployment envelope (matches spmd_audit.PRODUCTION_ENVELOPE):
+# 2^30 points over S=256 shards -> the per-shard/per-device scale every
+# single-device program is priced at.  Build programs run f32 (sketches and
+# distances are f32 regardless of the serving quantization); serving
+# programs price the int8 packing.
+ENV_SHARDS = 256
+ENV_N = (1 << 30) // ENV_SHARDS          # 4_194_304 owned rows per shard
+ENV_D = 128
+ENV_R = 64
+ENV_L_MAX = 64
+ENV_HALO = 0.10                          # measured worst halo (PIPS003 audit)
+
+
+def _report(msg: str) -> None:
+    print(f"  [mem] {msg}", file=sys.stderr)
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _aval_bytes(a) -> int:
+    if a is None:
+        return 0
+    return int(np.prod(a.shape, dtype=np.int64) * np.dtype(a.dtype).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# registry types
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MemProgram:
+    """One concrete lowerable instance of a registered program: the jitted
+    entry, its positional avals and static kwargs, and which positional
+    args are donated."""
+
+    fn: Any
+    args: tuple
+    statics: dict = dataclasses.field(default_factory=dict)
+    donated: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MemSpec:
+    """A registered hot-path program and its audit contract."""
+
+    name: str
+    path: str                      # repo-relative file for findings
+    kind: str                      # "build" | "serve"
+    base: dict                     # canonical lattice point {param: value}
+    build: Callable                # point dict -> MemProgram
+    sweep: dict = dataclasses.field(default_factory=dict)  # param -> bound
+    envelope: dict | None = None   # deployment point, or None
+    workspace: Callable | None = None      # point dict -> modeled temp bytes
+    envelope_pricer: Callable | None = None  # () -> dict(parts, total)
+    n_devices: int = 1
+    min_devices: int = 1
+    note: str = ""
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+_LEDGER_KEYS = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+
+_MEASURE_CACHE: dict = {}
+
+
+@functools.lru_cache(maxsize=1)
+def ledger_available() -> bool:
+    """Probe whether this backend exposes a usable compiled byte ledger."""
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda a: a + 1.0)
+        compiled = f.lower(_sds((128, 128), jnp.float32)).compile()
+        ma = compiled.memory_analysis()
+        return float(getattr(ma, "argument_size_in_bytes", 0) or 0) > 0
+    except Exception as e:          # pragma: no cover - backend dependent
+        _report(f"memory_analysis() probe failed ({type(e).__name__}: {e})")
+        return False
+
+
+def _point_key(spec: MemSpec, point: dict) -> tuple:
+    return (spec.name, tuple(sorted(point.items())))
+
+
+def measure(spec: MemSpec, point: dict) -> tuple[dict, Any]:
+    """AOT-compile the program at ``point`` and return (byte ledger,
+    compiled).  peak = argument + output + temp - alias (the donated /
+    aliased bytes are credited once, exactly as the runtime allocates)."""
+    key = _point_key(spec, point)
+    if key in _MEASURE_CACHE:
+        return _MEASURE_CACHE[key]
+    prog = spec.build(point)
+    compiled = prog.fn.lower(*prog.args, **prog.statics).compile()
+    ma = compiled.memory_analysis()
+    ledger = {k: float(getattr(ma, k, 0) or 0) for k in _LEDGER_KEYS}
+    ledger["peak"] = (ledger["argument_size_in_bytes"]
+                      + ledger["output_size_in_bytes"]
+                      + ledger["temp_size_in_bytes"]
+                      - ledger["alias_size_in_bytes"])
+    ledger["donated_arg_bytes"] = float(sum(
+        _aval_bytes(prog.args[i]) for i in prog.donated))
+    _MEASURE_CACHE[key] = (ledger, compiled)
+    return ledger, compiled
+
+
+def fit_exponent(xs, ys) -> float:
+    lx = np.log(np.asarray(xs, dtype=np.float64))
+    ly = np.log(np.maximum(np.asarray(ys, dtype=np.float64), 1.0))
+    return float(np.polyfit(lx, ly, 1)[0])
+
+
+def price_envelope(spec: MemSpec) -> dict | None:
+    """Exact-shape envelope price: argument + output avals at the envelope
+    point (via ``eval_shape`` — no compile) minus the donation credit, plus
+    the PIPM004-validated workspace model for temp."""
+    if spec.envelope_pricer is not None:
+        return spec.envelope_pricer()
+    if spec.envelope is None:
+        return None
+    import jax
+
+    prog = spec.build(spec.envelope)
+    target = functools.partial(prog.fn, **prog.statics) if prog.statics \
+        else prog.fn
+    out = jax.eval_shape(target, *prog.args)
+    arg_bytes = sum(_aval_bytes(a) for a in prog.args)
+    out_bytes = sum(_aval_bytes(a) for a in jax.tree_util.tree_leaves(out))
+    donated = sum(_aval_bytes(prog.args[i]) for i in prog.donated)
+    temp = int(spec.workspace(spec.envelope)) if spec.workspace else 0
+    return {
+        "argument_bytes": int(arg_bytes),
+        "output_bytes": int(out_bytes),
+        "donated_credit": int(min(donated, out_bytes)),
+        "workspace_bytes": temp,
+        "total": int(arg_bytes + out_bytes - min(donated, out_bytes) + temp),
+    }
+
+
+def _roofline_record(spec: MemSpec, compiled) -> dict:
+    from repro.roofline import analyze_compiled
+
+    r = analyze_compiled(
+        compiled, name=spec.name, mesh_name="host",
+        n_devices=spec.n_devices, kind=spec.kind)
+    return {
+        "t_compute": r.t_compute, "t_memory": r.t_memory,
+        "t_collective": r.t_collective, "dominant": r.dominant,
+        "hlo_flops": r.hlo_flops, "hlo_bytes": r.hlo_bytes,
+        "coll_bytes": r.coll_bytes, "bound_seconds": r.bound_seconds(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-spec audit
+# ---------------------------------------------------------------------------
+
+def audit_spec(spec: MemSpec, baseline_record: dict | None,
+               budget: int | None = None) -> tuple[list[Finding], dict]:
+    """All compile-time checks for one registered program.  Returns
+    (findings, envelope record)."""
+    from repro.kernels.tiling import hbm_budget
+
+    budget = hbm_budget() if budget is None else int(budget)
+    findings: list[Finding] = []
+
+    base_ledger, compiled = measure(spec, spec.base)
+
+    # -- PIPM002: donation credited in the byte ledger ----------------------
+    donated = base_ledger["donated_arg_bytes"]
+    if donated > 0 and base_ledger["alias_size_in_bytes"] < donated:
+        findings.append(Finding(
+            "PIPM002", spec.path, 0, spec.name,
+            f"{int(donated)} donated argument bytes but only "
+            f"{int(base_ledger['alias_size_in_bytes'])} aliased in the "
+            f"compiled ledger — the donation is not actually credited "
+            f"against allocation and peak memory double-counts the "
+            f"reservoir"))
+
+    # -- PIPM004: temp within the declared workspace model ------------------
+    def check_workspace(point: dict, ledger: dict) -> None:
+        if spec.workspace is None:
+            return
+        model = float(spec.workspace(point))
+        limit = model * WORKSPACE_TOL + WORKSPACE_SLACK
+        if ledger["temp_size_in_bytes"] > limit:
+            findings.append(Finding(
+                "PIPM004", spec.path, 0, spec.name,
+                f"temp bytes {int(ledger['temp_size_in_bytes'])} exceed the "
+                f"declared workspace model {int(model)} x {WORKSPACE_TOL} "
+                f"(+{WORKSPACE_SLACK} slack) at point {point} — hidden "
+                f"upcast/remat/gather blowup"))
+
+    check_workspace(spec.base, base_ledger)
+
+    # -- PIPM001: scaling exponents over the sweep lattice ------------------
+    exponents: dict[str, float] = {}
+    for param, bound in spec.sweep.items():
+        xs, ys = [], []
+        for f in SWEEP_FACTORS:
+            point = dict(spec.base)
+            point[param] = spec.base[param] * f
+            ledger, _ = measure(spec, point)
+            check_workspace(point, ledger)
+            xs.append(point[param])
+            ys.append(ledger["peak"])
+        exp = fit_exponent(xs, ys)
+        exponents[param] = exp
+        if exp > bound:
+            findings.append(Finding(
+                "PIPM001", spec.path, 0, spec.name,
+                f"peak bytes scale as {param}^{exp:.2f} over {xs} (bound "
+                f"{bound:.2f}) — the bounded-memory contract is broken: "
+                f"peak must depend on chunk/reservoir shapes only, never "
+                f"superlinearly (build programs: never on the emitted edge "
+                f"count E)"))
+
+    # -- PIPM003: envelope price fits the HBM budget ------------------------
+    env = price_envelope(spec)
+    if env is not None and env["total"] > budget:
+        findings.append(Finding(
+            "PIPM003", spec.path, 0, spec.name,
+            f"BigANN-1B per-shard envelope prices at "
+            f"{env['total'] / 2**30:.2f} GiB "
+            f"(args {env.get('argument_bytes', 0) / 2**30:.2f} + workspace "
+            f"{env.get('workspace_bytes', 0) / 2**30:.2f}) over the "
+            f"{budget / 2**30:.2f} GiB device budget "
+            f"(PIPNN_DEVICE_HBM_BUDGET)"))
+
+    # -- envelope record + PIPM005/PIPM006 ----------------------------------
+    record = {
+        "path": spec.path,
+        "kind": spec.kind,
+        "canonical_point": dict(spec.base),
+        "canonical_ledger": {k: base_ledger[k]
+                             for k in (*_LEDGER_KEYS, "peak")},
+        "exponents": exponents,
+        "envelope_point": dict(spec.envelope) if spec.envelope else None,
+        "envelope_bytes": env,
+        "roofline": _roofline_record(spec, compiled),
+    }
+
+    if baseline_record is None:
+        findings.append(Finding(
+            "PIPM006", spec.path, 0, spec.name,
+            "program has no record in memory_envelope.json — regenerate "
+            "with `python -m repro.analysis.memory_audit --write-envelope`"))
+    else:
+        missing = [k for k in ("canonical_ledger", "exponents",
+                               "envelope_bytes", "roofline")
+                   if baseline_record.get(k) is None
+                   and record.get(k) is not None]
+        if missing:
+            findings.append(Finding(
+                "PIPM006", spec.path, 0, spec.name,
+                f"envelope record incomplete (missing {missing}) — "
+                f"regenerate with --write-envelope"))
+        stored = (baseline_record.get("canonical_ledger") or {}).get("peak")
+        if stored:
+            grown = base_ledger["peak"] / float(stored) - 1.0
+            if grown > ENVELOPE_TOL:
+                findings.append(Finding(
+                    "PIPM005", spec.path, 0, spec.name,
+                    f"canonical-point peak grew {grown * 100:.1f}% over the "
+                    f"checked-in envelope ({int(base_ledger['peak'])} vs "
+                    f"{int(stored)}) — memory regression; if intended, "
+                    f"regenerate with --write-envelope"))
+
+    exps = " ".join(f"{p}^{e:.2f}" for p, e in exponents.items())
+    env_s = (f" env={env['total'] / 2**30:.2f}GiB" if env else "")
+    _report(f"{spec.name}: peak={base_ledger['peak'] / 2**20:.1f}MiB "
+            f"temp={base_ledger['temp_size_in_bytes'] / 2**20:.1f}MiB "
+            f"[{exps}]{env_s} "
+            f"roofline={record['roofline']['dominant']}")
+    return findings, record
+
+
+# ---------------------------------------------------------------------------
+# program registry
+# ---------------------------------------------------------------------------
+
+def _stream_spec() -> MemSpec:
+    def build(pt):
+        import jax.numpy as jnp
+
+        from repro.core.pipnn import _make_stream_step
+
+        step = _make_stream_step(None, pt["k"], "l2", "bidirected", False,
+                                 True, pt["sub"], 1.2, 64, "segmented",
+                                 False)
+        n, d, l, s, c, m = (pt["n"], pt["d"], pt["l_max"], pt["s"], pt["c"],
+                            pt["m"])
+        args = (_sds((n, l), jnp.int32), _sds((n, l), jnp.int32),
+                _sds((n, l), jnp.float32), _sds((n, d), jnp.float32),
+                _sds((n, m), jnp.float32), _sds((s, c), jnp.int32))
+        return MemProgram(step, args, donated=(0, 1, 2))
+
+    def ws(pt):
+        from repro.core.pipnn import stream_step_workspace_bytes
+
+        return stream_step_workspace_bytes(pt["n"], pt["l_max"], pt["s"],
+                                           pt["c"], pt["k"])
+
+    return MemSpec(
+        name="stream_step", path="src/repro/core/pipnn.py", kind="build",
+        base=dict(n=2048, d=16, l_max=16, s=8, c=16, k=4, m=8, sub=4),
+        sweep=dict(n=DEFAULT_EXPONENT_BOUND, s=DEFAULT_EXPONENT_BOUND,
+                   l_max=DEFAULT_EXPONENT_BOUND, d=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(n=ENV_N, d=ENV_D, l_max=ENV_L_MAX, s=1024, c=256,
+                      k=8, m=12, sub=64),
+        build=build, workspace=ws)
+
+
+def _merge_spec(flavor: str) -> MemSpec:
+    def build(pt):
+        import jax.numpy as jnp
+
+        from repro.core import hashprune as hp
+
+        n, l, e = pt["n"], pt["l_max"], pt["e"]
+        args = (_sds((n, l), jnp.int32), _sds((n, l), jnp.int32),
+                _sds((n, l), jnp.float32), _sds((e,), jnp.int32),
+                _sds((e,), jnp.int32), _sds((e,), jnp.int32),
+                _sds((e,), jnp.float32))
+        if flavor == "segmented":
+            return MemProgram(hp._merge_segmented_jit, args,
+                              statics=dict(use_pallas=False,
+                                           interpret=False),
+                              donated=(0, 1, 2))
+        return MemProgram(hp._merge_flat_jit, args, donated=(0, 1, 2))
+
+    def ws(pt):
+        from repro.core import hashprune as hp
+
+        f = (hp.merge_segmented_workspace_bytes if flavor == "segmented"
+             else hp.merge_flat_workspace_bytes)
+        return f(pt["n"], pt["l_max"], pt["e"])
+
+    return MemSpec(
+        name=f"merge_{flavor}", path="src/repro/core/hashprune.py",
+        kind="build",
+        base=dict(n=4096, l_max=16, e=65536),
+        sweep=dict(n=DEFAULT_EXPONENT_BOUND, l_max=DEFAULT_EXPONENT_BOUND,
+                   e=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(n=ENV_N, l_max=ENV_L_MAX, e=4 * (1 << 22)),
+        build=build, workspace=ws)
+
+
+def _final_prune_spec() -> MemSpec:
+    def build(pt):
+        import jax.numpy as jnp
+
+        from repro.core.robust_prune import _final_prune_step
+
+        n, d, l, chunk, md = (pt["n"], pt["d"], pt["l_max"], pt["chunk"],
+                              pt["max_deg"])
+        args = (_sds((n, md), jnp.int32), _sds((n, md), jnp.float32),
+                _sds((n, d), jnp.float32), _sds((n, l), jnp.int32),
+                _sds((n, l), jnp.float32), _sds((), jnp.int32))
+        statics = dict(alpha=1.44, max_deg=md, metric="l2", chunk=chunk)
+        return MemProgram(_final_prune_step, args, statics=statics,
+                          donated=(0, 1))
+
+    def ws(pt):
+        from repro.core.robust_prune import final_prune_workspace_bytes
+
+        return final_prune_workspace_bytes(pt["chunk"], pt["l_max"],
+                                           pt["d"], pt["max_deg"])
+
+    return MemSpec(
+        name="final_prune_step", path="src/repro/core/robust_prune.py",
+        kind="build",
+        base=dict(n=4096, d=16, l_max=16, chunk=512, max_deg=16),
+        sweep=dict(n=DEFAULT_EXPONENT_BOUND, chunk=DEFAULT_EXPONENT_BOUND,
+                   l_max=1.6, d=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(n=ENV_N, d=ENV_D, l_max=ENV_L_MAX, chunk=2048,
+                      max_deg=ENV_R),
+        build=build, workspace=ws)
+
+
+def _carve_spec() -> MemSpec:
+    def _shapes(pt):
+        from repro.core.rbc import RBCParams, carve_chunks
+
+        return carve_chunks(pt["n"], RBCParams(metric="l2"))
+
+    def build(pt):
+        import jax.numpy as jnp
+
+        from repro.core.rbc import RBCParams, _make_static_carve
+
+        sh = _shapes(pt)
+        p = RBCParams(metric="l2")
+        step = _make_static_carve(
+            sh["n_pad"], sh["l0"], sh["f0"], sh["f0r"], sh["cap_b"],
+            sh["l1"], sh["f1"], p.c_max, p.metric, sh["sub"],
+            sh["bucket_chunk"], sh["cap_chunk"])
+        args = (_sds((sh["n_pad"], pt["d"]), jnp.float32),
+                _sds((sh["l0"],), jnp.int32), _sds((), jnp.int32))
+        return MemProgram(step, args)
+
+    def ws(pt):
+        from repro.core.rbc import carve_workspace_bytes
+
+        sh = _shapes(pt)
+        return carve_workspace_bytes(
+            sh["n_pad"], pt["d"], sh["l0"], sh["f0r"], sh["cap_b"],
+            sh["l1"], sh["f1"], sh["bucket_chunk"], sh["cap_chunk"])
+
+    return MemSpec(
+        name="carve_static", path="src/repro/core/rbc.py", kind="build",
+        base=dict(n=4096, d=16),
+        sweep=dict(n=1.35, d=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(n=ENV_N, d=ENV_D),
+        build=build, workspace=ws,
+        note="n exponent bound 1.35: cap_b rounds up in steps of 8, so tiny "
+             "lattice points see a discretization bump over the true ~n^1")
+
+
+def _engine_build(pt) -> MemProgram:
+    import jax.numpy as jnp
+
+    from repro.core import beam_search as bs
+
+    n, d, nq = pt["n"], pt["d"], pt["nq"]
+    int8 = bool(pt.get("int8"))
+    x = _sds((n, d), jnp.int8 if int8 else jnp.float32)
+    scales = _sds((n,), jnp.float32) if int8 else None
+    args = (_sds((n, pt["r"]), jnp.int32), x, _sds((n,), jnp.float32),
+            _sds((nq, d), jnp.float32), _sds((), jnp.int32), scales)
+    statics = dict(beam=pt["beam"], iters=pt["iters"], metric="l2",
+                   expansions=pt["expansions"], early_exit=True,
+                   kernel_path="xla", interpret=False)
+    return MemProgram(bs._beam_search_multi, args, statics=statics)
+
+
+def _engine_ws(pt) -> int:
+    from repro.core.serving import engine_workspace_bytes
+
+    return engine_workspace_bytes(pt["nq"], pt["n"], pt["d"], pt["r"],
+                                  pt["beam"], pt["expansions"])
+
+
+def _engine_spec() -> MemSpec:
+    return MemSpec(
+        name="serving_engine", path="src/repro/core/serving.py",
+        kind="serve",
+        base=dict(n=4096, d=16, r=8, nq=8, beam=8, expansions=2, iters=12),
+        sweep=dict(n=DEFAULT_EXPONENT_BOUND, d=DEFAULT_EXPONENT_BOUND,
+                   nq=DEFAULT_EXPONENT_BOUND, beam=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(n=_env_shard_rows(), d=ENV_D, r=ENV_R, nq=32, beam=32,
+                      expansions=4, iters=36, int8=True),
+        build=_engine_build, workspace=_engine_ws)
+
+
+def _engine_int8_spec() -> MemSpec:
+    return MemSpec(
+        name="serving_engine_int8", path="src/repro/core/serving.py",
+        kind="serve",
+        base=dict(n=4096, d=16, r=8, nq=8, beam=8, expansions=2, iters=12,
+                  int8=True),
+        envelope=dict(n=_env_shard_rows(), d=ENV_D, r=ENV_R, nq=32, beam=32,
+                      expansions=4, iters=36, int8=True),
+        build=_engine_build, workspace=_engine_ws)
+
+
+def _straggler_spec() -> MemSpec:
+    # the ServeLoop straggler rerun: fixed straggler_chunk batch, the
+    # ladder's widest beam, the full backstop_iters cap
+    def ws(pt):
+        from repro.launch.serve_loop import straggler_workspace_bytes
+
+        return straggler_workspace_bytes(pt["nq"], pt["n"], pt["d"],
+                                         pt["r"], pt["beam"],
+                                         pt["expansions"])
+
+    return MemSpec(
+        name="serve_loop_straggler", path="src/repro/launch/serve_loop.py",
+        kind="serve",
+        base=dict(n=4096, d=16, r=8, nq=8, beam=32, expansions=4, iters=36),
+        envelope=dict(n=_env_shard_rows(), d=ENV_D, r=ENV_R, nq=8, beam=32,
+                      expansions=4, iters=36, int8=True),
+        build=_engine_build, workspace=ws)
+
+
+def _topk_spec() -> MemSpec:
+    def build(pt):
+        import jax.numpy as jnp
+
+        from repro.distributed import serving as dserv
+
+        s, nq, b = pt["s"], pt["nq"], pt["b"]
+        args = (_sds((s, nq, b), jnp.int32), _sds((s, nq, b), jnp.float32))
+        return MemProgram(dserv.cross_shard_topk, args,
+                          statics=dict(k=pt["k"]))
+
+    def ws(pt):
+        from repro.distributed.serving import cross_shard_topk_workspace_bytes
+
+        return cross_shard_topk_workspace_bytes(pt["s"], pt["nq"], pt["b"],
+                                                pt["k"])
+
+    return MemSpec(
+        name="cross_shard_topk", path="src/repro/distributed/serving.py",
+        kind="serve",
+        base=dict(s=8, nq=8, b=8, k=10),
+        sweep=dict(s=DEFAULT_EXPONENT_BOUND, nq=DEFAULT_EXPONENT_BOUND,
+                   b=DEFAULT_EXPONENT_BOUND),
+        envelope=dict(s=ENV_SHARDS, nq=32, b=32, k=10),
+        build=build, workspace=ws)
+
+
+def _env_shard_rows() -> int:
+    """Per-shard rows at the envelope, grown by the halo + pad slack the
+    packing model uses (spmd_audit.price_shard_packing)."""
+    return math.ceil(ENV_N * (1.0 + ENV_HALO) * 1.10)
+
+
+def _sharded_spec() -> MemSpec:
+    def build(pt):
+        from repro.analysis import spmd_audit
+
+        prog = spmd_audit._serving_program(pt["s"])
+        return MemProgram(prog.fn, prog.args)
+
+    def pricer():
+        from repro.analysis.spmd_audit import price_shard_packing
+        from repro.distributed.serving import sharded_search_workspace_bytes
+
+        packing = price_shard_packing(1 << 30, ENV_D, ENV_R, ENV_SHARDS,
+                                      int8=True, halo_fraction=ENV_HALO)
+        ws = sharded_search_workspace_bytes(32, packing["rows"], ENV_D,
+                                            ENV_R, 32, 4, ENV_SHARDS)
+        return {
+            "argument_bytes": int(packing["total"]),
+            "output_bytes": int(ENV_SHARDS * 32 * 32 * 8),
+            "donated_credit": 0,
+            "workspace_bytes": int(ws),
+            "total": int(packing["total"] + ENV_SHARDS * 32 * 32 * 8 + ws),
+        }
+
+    import jax
+
+    ndev = len(jax.devices())
+    return MemSpec(
+        name="sharded_search", path="src/repro/distributed/serving.py",
+        kind="serve",
+        base=dict(s=min(4, ndev)),
+        envelope=dict(s=ENV_SHARDS),
+        build=build, envelope_pricer=pricer,
+        n_devices=min(4, ndev), min_devices=2,
+        note="per-shard body collective-freedom is PIPS001; this spec "
+             "audits the ledger and prices the packed envelope")
+
+
+def default_specs() -> list[MemSpec]:
+    return [
+        _stream_spec(),
+        _merge_spec("segmented"),
+        _merge_spec("flat"),
+        _final_prune_spec(),
+        _carve_spec(),
+        _engine_spec(),
+        _engine_int8_spec(),
+        _straggler_spec(),
+        _topk_spec(),
+        _sharded_spec(),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def load_envelope(path: pathlib.Path = ENVELOPE_PATH) -> dict:
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text()).get("programs", {})
+    except (json.JSONDecodeError, AttributeError):
+        return {}
+
+
+def audit_all(specs: list[MemSpec] | None = None, *,
+              envelope_path: pathlib.Path = ENVELOPE_PATH,
+              write_envelope: bool = False,
+              budget: int | None = None) -> list[Finding]:
+    """Run every registered spec; returns findings.  With
+    ``write_envelope`` the measured records replace ``envelope_path`` and
+    PIPM005/PIPM006 are (vacuously) clean."""
+    import jax
+
+    if not ledger_available():
+        _report("compiled memory_analysis() unavailable on this backend — "
+                "memory pass skipped")
+        return []
+    specs = default_specs() if specs is None else specs
+    baseline = {} if write_envelope else load_envelope(envelope_path)
+    ndev = len(jax.devices())
+
+    findings: list[Finding] = []
+    records: dict[str, dict] = {}
+    for spec in specs:
+        if ndev < spec.min_devices:
+            _report(f"{spec.name}: needs >= {spec.min_devices} devices "
+                    f"(have {ndev}) — skipped")
+            continue
+        try:
+            f, record = audit_spec(
+                spec, None if write_envelope else baseline.get(spec.name),
+                budget=budget)
+        except Exception as e:
+            findings.append(Finding(
+                "PIPM006", spec.path, 0, spec.name,
+                f"registered program failed to lower/compile for the "
+                f"memory audit: {type(e).__name__}: {e}"))
+            continue
+        if write_envelope:
+            f = [x for x in f if x.rule not in ("PIPM005", "PIPM006")]
+        findings += f
+        records[spec.name] = record
+
+    if write_envelope:
+        from repro.kernels.tiling import hbm_budget
+
+        payload = {
+            "_meta": {
+                "budget_bytes": hbm_budget() if budget is None else budget,
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "regenerate": "python -m repro.analysis.memory_audit "
+                              "--write-envelope",
+            },
+            "programs": records,
+        }
+        envelope_path.write_text(json.dumps(payload, indent=1,
+                                            sort_keys=True) + "\n")
+        _report(f"wrote {len(records)} program record(s) to {envelope_path}")
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.memory_audit",
+        description="PiPNN memory-bound auditor (PIPM001-006)")
+    ap.add_argument("--write-envelope", action="store_true",
+                    help="regenerate memory_envelope.json from the current "
+                         "measurements")
+    ap.add_argument("--envelope", type=pathlib.Path, default=ENVELOPE_PATH)
+    args = ap.parse_args(argv)
+
+    findings = audit_all(envelope_path=args.envelope,
+                         write_envelope=args.write_envelope)
+    for f in findings:
+        print(f.render())
+    status = "FAIL" if findings else "OK"
+    print(f"repro.analysis.memory_audit: {status} — {len(findings)} "
+          f"finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

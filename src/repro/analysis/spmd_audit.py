@@ -55,7 +55,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import os
 import sys
 from typing import Callable
 
@@ -72,15 +71,13 @@ COLLECTIVE_PRIMS = frozenset({
     "pgather", "pdot", "psum2", "all_gather_invariant",
 })
 
-# per-device HBM the footprint model gates against (v5e-class default)
-DEFAULT_HBM_BUDGET = 16 * 1024**3
-HBM_BUDGET_ENV = "PIPNN_DEVICE_HBM_BUDGET"
+# per-device HBM the footprint model gates against — single-sourced in
+# kernels/tiling.py (env override PIPNN_DEVICE_HBM_BUDGET, v5e default)
+# so PIPS003, the roofline fits-HBM bit and PIPM003 can never diverge
+from repro.kernels.tiling import (  # noqa: F401  (re-exported for tests)
+    DEFAULT_HBM_BUDGET, HBM_BUDGET_ENV, hbm_budget)
 
 SWEEP = (1, 2, 4, 8)
-
-
-def hbm_budget() -> int:
-    return int(os.environ.get(HBM_BUDGET_ENV, DEFAULT_HBM_BUDGET))
 
 
 def shard_counts(minimum: int = 1) -> list[int]:

@@ -3,7 +3,6 @@
 Every assigned architecture gets one module in this package exposing
 ``get_config() -> ArchConfig`` with the EXACT published hyper-parameters,
 plus a reduced ``smoke_model`` of the same family for CPU smoke tests.
-The dry-run (launch/dryrun.py) iterates ``ArchConfig.runnable_cells()``.
 """
 from __future__ import annotations
 

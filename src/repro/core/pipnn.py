@@ -250,6 +250,35 @@ def _make_stream_step(
     return jax.jit(step, donate_argnums=(0, 1, 2))
 
 
+def stream_step_workspace_bytes(
+    n: int, l_max: int, s: int, c: int, k: int, *,
+    method: str = "bidirected", merge: str = "segmented",
+) -> int:
+    """Modeled XLA temp bytes of one ``_make_stream_step`` chunk step:
+    the emitted src/dst/hash/dist candidate buffers (one [s * epl] set
+    plus the padding-masked copies handed to the fold) and the fold's
+    own workspace (``hashprune.*_workspace_bytes``).  ``s`` leaves of
+    ``c`` padded entries emit ``epl`` edges each — the model's only
+    inputs are the CHUNK shape and the reservoir shape, never the total
+    emitted edge count E: that is the paper's bounded-memory contract,
+    and the memory auditor (``repro.analysis.memory_audit``) validates
+    this model against the compiled byte ledger at every lattice point
+    (PIPM004) and prices the BigANN-1B per-shard envelope with it
+    (PIPM003)."""
+    from repro.core.hashprune import (merge_flat_workspace_bytes,
+                                      merge_segmented_workspace_bytes)
+
+    if method == "robust_prune":
+        epl = c * c
+    else:
+        epl = (2 if method == "bidirected" else 1) * c * k
+    e = s * epl
+    emit = 2 * e * _EDGE_BYTES
+    fold = (merge_flat_workspace_bytes if merge == "flat"
+            else merge_segmented_workspace_bytes)(n, l_max, e)
+    return emit + fold
+
+
 def _stream_edges_per_leaf(leaf: LeafParams, c_max: int) -> int:
     """Candidate-edge buffer entries one padded leaf contributes to the
     fused step (the emitters' fixed output shapes)."""

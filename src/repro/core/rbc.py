@@ -349,12 +349,21 @@ def _static_shapes(n: int, params: RBCParams) -> dict[str, int]:
 @functools.lru_cache(maxsize=16)
 def _make_static_carve(n_pad: int, l0: int, f0: int, f0r: int, cap_b: int,
                        l1: int, f1: int, c_max: int, metric: str, sub: int,
-                       bucket_chunk: int):
+                       bucket_chunk: int, cap_chunk: int):
     """Compile the one-shot two-level carve: level-0 leader GEMM + top-f0r,
     capacity-routed bucket grouping (primary replicas claim capacity
     first, spill replicas fill what is left), strided level-1 leaders,
     level-1 GEMM + top-f1 (per bucket chunk), capacity-routed leaf
-    grouping.  Returns leaf_ids [l0 * l1, c_max] int32, -1 padded."""
+    grouping.  Returns leaf_ids [l0 * l1, c_max] int32, -1 padded.
+
+    BOTH assignment levels stream their point gathers: level 0 in ``sub``
+    rows and level 1 in ``cap_chunk``-point sub-blocks of each bucket
+    (the ``build_index`` tile-step ``assign_chunk`` pattern), so the
+    largest points intermediate is [bucket_chunk, cap_chunk, d] — NOT the
+    full [bucket_chunk, cap_b, d] bucket gather, whose cap_b ~ n*f0/l0
+    rows grow with the dataset and would dominate peak carve memory at
+    billion scale (the ROADMAP carve-gather item; proven chunk-bounded by
+    the PIPM001 memory audit)."""
     import jax
     import jax.numpy as jnp
 
@@ -399,11 +408,27 @@ def _make_static_carve(n_pad: int, l0: int, f0: int, f0r: int, cap_b: int,
         lead1_idx = bpid[:, ::stride][:, :l1]                  # [l0, l1]
         lead1_ok = bval[:, ::stride][:, :l1]
 
+        n_cc = cap_b // cap_chunk
+
         def bucket_blk(t):
+            # gather this chunk's leaders once ([bucket_chunk, l1, d]),
+            # then stream the cap_b point axis in cap_chunk sub-blocks so
+            # the only large points intermediate is [bucket_chunk,
+            # cap_chunk, d] — never the full bucket.  leader_assign is
+            # row-independent over points, so the split is bit-identical.
             ids, iok, lids, lok = t
-            return leader_assign(
-                xj[jnp.maximum(ids, 0)], xj[jnp.maximum(lids, 0)], f1,
-                metric=metric, point_valid=iok, leader_valid=lok)
+            leaders = xj[jnp.maximum(lids, 0)]
+
+            def cc_blk(u):
+                cids, cok = u
+                return leader_assign(
+                    xj[jnp.maximum(cids, 0)], leaders, f1,
+                    metric=metric, point_valid=cok, leader_valid=lok)
+
+            cc = lambda a: jnp.swapaxes(
+                a.reshape(a.shape[0], n_cc, cap_chunk), 0, 1)
+            a = jax.lax.map(cc_blk, (cc(ids), cc(iok)))
+            return jnp.swapaxes(a, 0, 1).reshape(ids.shape[0], cap_b, f1)
 
         resh = lambda a: a.reshape((l0 // bucket_chunk, bucket_chunk)
                                    + a.shape[1:])
@@ -428,6 +453,46 @@ def _make_static_carve(n_pad: int, l0: int, f0: int, f0r: int, cap_b: int,
     return jax.jit(step)
 
 
+def carve_workspace_bytes(n_pad: int, d: int, l0: int, f0r: int, cap_b: int,
+                          l1: int, f1: int, bucket_chunk: int,
+                          cap_chunk: int) -> int:
+    """Modeled XLA temp bytes of one ``_make_static_carve`` step: the
+    [n_pad, f0r] level-0 assignment plus its capacity-routing sort
+    buffers (key + validity + payload per replica instance), the
+    STREAMED level-1 gather ([bucket_chunk, cap_chunk, d] points +
+    [bucket_chunk, l1, d] leaders — never the full [bucket_chunk, cap_b,
+    d] bucket), and the leaf placements with their routing sort.
+    Validated against the compiled ledger by the memory auditor
+    (PIPM004, ~2x above the measured CPU-XLA temp) and priced at the
+    deployment envelope by PIPM003 — which is where a regression to the
+    bucket-wide gather shows up: at envelope scale that gather alone
+    adds a bucket_chunk * cap_b * d term this model does not grant."""
+    inst0 = n_pad * f0r
+    level0 = inst0 * 4 + 3 * inst0 * 9
+    gather1 = bucket_chunk * (cap_chunk * d + l1 * d) * 4
+    placements = l0 * cap_b * f1
+    level1 = placements * 4 + 3 * placements * 9
+    return level0 + gather1 + level1
+
+
+def carve_chunks(n: int, params: RBCParams) -> dict:
+    """The static chunking ``ball_carve_device`` resolves for ``n``
+    points: level-0 row sub-batch ``sub``, level-1 bucket group
+    ``bucket_chunk`` and point sub-block ``cap_chunk`` (largest divisor
+    of ``cap_b`` keeping ``bucket_chunk * cap_chunk`` gathered rows near
+    ``params.assign_rows``).  Shared with the memory auditor so the
+    audited program is exactly the production one."""
+    sh = _static_shapes(n, params)
+    sub = min(_next_pow2(params.assign_rows), _next_pow2(max(n, 8)))
+    bucket_chunk = next(c for c in (8, 4, 2, 1) if sh["l0"] % c == 0)
+    cap_target = min(sh["cap_b"],
+                     max(8, params.assign_rows // max(bucket_chunk, 1)))
+    cap_chunk = next(c for c in range(cap_target, 0, -1)
+                     if sh["cap_b"] % c == 0)
+    return dict(sh, sub=sub, n_pad=_round_up(n, sub),
+                bucket_chunk=bucket_chunk, cap_chunk=cap_chunk)
+
+
 def ball_carve_device(
     x: np.ndarray, params: RBCParams, *, seed: int | None = None
 ) -> np.ndarray:
@@ -450,17 +515,16 @@ def ball_carve_device(
     n, _ = x.shape
     if n <= params.c_max:
         return leaves_to_padded([np.arange(n, dtype=np.int64)], params.c_max)
-    sh = _static_shapes(n, params)
+    sh = carve_chunks(n, params)
     rng = np.random.default_rng(params.seed if seed is None else seed)
     lead0 = rng.choice(n, size=sh["l0"], replace=False).astype(np.int32)
-    sub = min(_next_pow2(params.assign_rows), _next_pow2(max(n, 8)))
-    n_pad = _round_up(n, sub)
+    n_pad = sh["n_pad"]
     xpad = x if n_pad == n else np.concatenate(
         [x, np.zeros((n_pad - n, x.shape[1]), x.dtype)])
-    bucket_chunk = next(c for c in (8, 4, 2, 1) if sh["l0"] % c == 0)
     step = _make_static_carve(
         n_pad, sh["l0"], sh["f0"], sh["f0r"], sh["cap_b"], sh["l1"],
-        sh["f1"], params.c_max, params.metric, sub, bucket_chunk)
+        sh["f1"], params.c_max, params.metric, sh["sub"],
+        sh["bucket_chunk"], sh["cap_chunk"])
     leaf_ids = np.asarray(step(jnp.asarray(xpad), jnp.asarray(lead0),
                                jnp.asarray(np.int32(n))))
     leaf_ids = leaf_ids[(leaf_ids >= 0).any(axis=1)]

@@ -183,6 +183,21 @@ def _final_prune_step(
     return out_ids, out_d
 
 
+def final_prune_workspace_bytes(chunk: int, l_max: int, d: int,
+                                max_deg: int) -> int:
+    """Modeled XLA temp bytes of one ``_final_prune_step``: the gathered
+    [chunk, L, d] candidate vectors, the [chunk, L, L] candidate-candidate
+    distance matrix (plus one copy — the scan threads it through its
+    carry), and the per-row sort/keep buffers.  Chunk-shaped only: the
+    [n, max_deg] outputs are donated buffers, not temp.  Validated by the
+    memory auditor at every lattice point (PIPM004); prices the
+    deployment envelope (PIPM003)."""
+    gathered = chunk * l_max * d * 4
+    d_cc = 2 * chunk * l_max * l_max * 4
+    sort_keep = 6 * chunk * l_max * 8 + chunk * max_deg * 8
+    return gathered + d_cc + sort_keep
+
+
 def final_prune(
     x: jax.Array,
     res: Reservoir,

@@ -73,6 +73,25 @@ from repro.core import metrics as _metrics
 logger = logging.getLogger(__name__)
 
 
+def engine_workspace_bytes(nq: int, n: int, d: int, r: int, beam: int,
+                           expansions: int) -> int:
+    """Modeled XLA temp bytes of one ``_beam_search_multi`` dispatch at
+    the padded ``query_chunk`` shape: the per-step [nq, E*R] candidate
+    block (gathered neighbor vectors + distances), the width
+    ``beam + E*R`` rank-merge buffers, the [nq, beam] visited/beam state
+    threaded through the while carry, and the per-query visited-id
+    history.  Chunk-shaped (nq is the padded query chunk) — the index
+    arrays themselves are arguments, not temp, so serving workspace
+    never scales with the dataset beyond the O(nq * E * R * d) gather.
+    Validated by the memory auditor at every lattice point (PIPM004);
+    prices the per-shard deployment envelope (PIPM003)."""
+    cand = nq * expansions * r
+    gather = cand * (4 * d + 48)
+    merge = nq * (beam + expansions * r) * 64
+    state = nq * beam * (4 * d + 64)
+    return gather + merge + state
+
+
 def _is_int8(dtype) -> bool:
     """True for the scalar-quantized packing request: the string ``"int8"``
     or any spelling of the int8 dtype (``jnp.int8``, ``np.int8``, ...)."""

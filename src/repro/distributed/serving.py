@@ -121,6 +121,36 @@ def cross_shard_topk(ids_s: jax.Array, ds_s: jax.Array, *, k: int
     return ids, ds
 
 
+def cross_shard_topk_workspace_bytes(n_shards: int, nq: int, b: int,
+                                     k: int) -> int:
+    """Modeled XLA temp bytes of one ``cross_shard_topk`` merge: the
+    [nq, k] carry triplet (ids + dists + visited) double-buffered through
+    the scan plus one [nq, b] block's rank-merge scratch.  Independent of
+    ``n_shards`` beyond the stacked INPUT blocks (arguments, not temp) —
+    the scan body is one merge regardless of S.  Validated by the memory
+    auditor (PIPM004); prices the S=256 envelope (PIPM003)."""
+    carry = 2 * nq * k * 12
+    block = nq * (b + k) * 32
+    return carry + block
+
+
+def sharded_search_workspace_bytes(nq: int, m: int, d: int, r: int,
+                                   beam: int, expansions: int,
+                                   n_shards: int) -> int:
+    """Modeled per-device XLA temp bytes of one sharded search dispatch:
+    the unchanged per-shard engine workspace over the [m, ...] local
+    shard (``core.serving.engine_workspace_bytes``) plus the all-gathered
+    [S, nq, beam] result blocks feeding the cross-shard merge.  Validated
+    by the memory auditor when a multi-device mesh exists (PIPM004);
+    prices the BigANN-1B S=256 envelope together with the packing model
+    (``spmd_audit.price_shard_packing``) in PIPM003."""
+    from repro.core.serving import engine_workspace_bytes
+
+    engine = engine_workspace_bytes(nq, m, d, r, beam, expansions)
+    gathered = 2 * n_shards * nq * beam * 8
+    return engine + gathered
+
+
 @dataclasses.dataclass
 class ShardedServingIndex:
     """A PiPNN index packed as one partition-aligned shard per device.

@@ -16,9 +16,32 @@ disagree about what a block really costs on TPU.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 LANE = 128
+
+# ---------------------------------------------------------------------------
+# Device-HBM budget — the ONE resolver every byte gate prices against.
+#
+# Three consumers used to carry their own copy of "how much HBM does a
+# device have" (the SPMD auditor's PIPS003 gate, the roofline model's
+# fits-HBM bit, and the memory auditor's PIPM003 envelope gate); a drift
+# between them would let a packing pass one gate and fail another.  They
+# all call ``hbm_budget()`` now: v5e-class 16 GiB by default, overridable
+# per run via the ``PIPNN_DEVICE_HBM_BUDGET`` env var (bytes).
+# ---------------------------------------------------------------------------
+
+DEFAULT_HBM_BUDGET = 16 * 1024**3
+HBM_BUDGET_ENV = "PIPNN_DEVICE_HBM_BUDGET"
+
+
+def hbm_budget() -> int:
+    """Per-device HBM byte budget: ``PIPNN_DEVICE_HBM_BUDGET`` env
+    override, v5e-class 16 GiB default.  Read at call time so a test or
+    CI job can re-point every gate with one env var."""
+    return int(os.environ.get(HBM_BUDGET_ENV, DEFAULT_HBM_BUDGET))
 
 # minimum sublane rows per element width (bytes)
 _SUBLANE_BY_ITEMSIZE = {1: 32, 2: 16, 4: 8, 8: 8}

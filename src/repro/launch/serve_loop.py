@@ -139,6 +139,22 @@ def default_ladder(beam: int = 32) -> tuple[OperatingPoint, ...]:
     )
 
 
+def straggler_workspace_bytes(straggler_chunk: int, n: int, d: int, r: int,
+                              max_beam: int, expansions: int = 4) -> int:
+    """Modeled XLA temp bytes of the straggler-rerun dispatch: the same
+    engine program as the drain pass but at the fixed ``straggler_chunk``
+    batch, the ladder's WIDEST beam and the full ``backstop_iters`` cap
+    (iters only bounds the while loop — it never shapes a buffer, so the
+    model is the engine model at the straggler shape).  Registered with
+    the memory auditor as its own program (the compile is distinct) and
+    validated per lattice point (PIPM004) / priced at the per-shard
+    envelope (PIPM003)."""
+    from repro.core.serving import engine_workspace_bytes
+
+    return engine_workspace_bytes(straggler_chunk, n, d, r, max_beam,
+                                  expansions)
+
+
 def ladder_from_bench(path, *, max_rungs: int = 4
                       ) -> tuple[OperatingPoint, ...] | None:
     """Derive the degradation ladder from BENCH_qps.json measurements.

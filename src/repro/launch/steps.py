@@ -1,4 +1,4 @@
-"""Step builders shared by dryrun.py, train.py and serve.py.
+"""Step builders shared by train.py and serve.py.
 
 One place defines, per (architecture x shape-cell):
 
@@ -6,7 +6,7 @@ One place defines, per (architecture x shape-cell):
   * its abstract inputs             (ShapeDtypeStruct pytrees, no allocation)
   * its in/out shardings on a mesh  (from repro.distributed.sharding rules)
 
-so the dry-run compiles EXACTLY what the real launchers run.
+so the launchers all compile EXACTLY the same programs.
 """
 from __future__ import annotations
 

@@ -1,3 +1,3 @@
 from repro.roofline.analysis import (  # noqa: F401
-    HW, CellRoofline, analyze_compiled, collective_bytes, model_flops,
+    HW, V5E, CellRoofline, analyze_compiled, collective_bytes,
 )

@@ -1,4 +1,15 @@
-"""Three-term roofline from a compiled (AOT) dry-run artifact.
+"""Three-term roofline from a compiled (AOT) PiPNN program.
+
+Consumed by the memory-bound auditor (``repro.analysis.memory_audit``,
+rule PIPM006): every registered jitted hot path — the streaming build
+chunk step, the reservoir folds, the final prune, the static carve, the
+serving engine, the sharded search body and the cross-shard merge — gets
+a three-term v5e estimate recorded alongside the memory envelope
+(``memory_envelope.json``), so the bench trajectory (BENCH_build /
+BENCH_qps) can be judged against hardware limits.  GGNN and CAGRA
+(PAPERS.md) both show the binding constraint for graph-ANN on
+accelerators is memory footprint and bandwidth, not FLOPs — which is why
+the roofline prices all three terms instead of a FLOPs-only estimate.
 
 No real TPU exists in this container, so the "profile" is the compiled
 module itself:
@@ -44,12 +55,21 @@ _DTYPE_BYTES = {
 }
 
 
+def _default_hbm_bytes() -> float:
+    # single-sourced with PIPS003 / PIPM003 (kernels/tiling.hbm_budget):
+    # the roofline's fits-HBM bit and the lint gates price the same number
+    from repro.kernels.tiling import hbm_budget
+
+    return float(hbm_budget())
+
+
 @dataclasses.dataclass(frozen=True)
 class HW:
     peak_flops: float = 197e12        # bf16 per chip
     hbm_bw: float = 819e9             # bytes/s per chip
     link_bw: float = 50e9             # bytes/s per ICI link
-    hbm_bytes: float = 16e9           # v5e HBM capacity per chip
+    hbm_bytes: float = dataclasses.field(
+        default_factory=_default_hbm_bytes)  # HBM capacity per chip
 
 
 V5E = HW()
@@ -138,15 +158,6 @@ def collective_bytes(hlo_text: str, *, n_devices: int) -> dict[str, Any]:
         "count": count,
         "ops": ops[:40],
     }
-
-
-# ---------------------------------------------------------------------------
-# Model (useful) FLOPs
-# ---------------------------------------------------------------------------
-
-def model_flops(n_params_active: float, tokens: float, kind: str) -> float:
-    """6*N*D for training, 2*N*D forward-only (prefill/decode)."""
-    return (6.0 if kind == "train" else 2.0) * n_params_active * tokens
 
 
 # ---------------------------------------------------------------------------
